@@ -1,0 +1,30 @@
+"""Shared benchmark helpers: timing + CSV row emission.
+
+Contract (benchmarks/run.py): every benchmark prints rows
+``name,us_per_call,derived`` where ``derived`` is a compact
+``key=value|key=value`` string of the figure's headline numbers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """Returns (result, microseconds per call)."""
+    fn(*args, **kw)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        result = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return result, us
+
+
+def emit(name: str, us: float, derived: Dict[str, object]) -> str:
+    flat = "|".join(
+        f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in derived.items()
+    )
+    row = f"{name},{us:.1f},{flat}"
+    print(row)
+    return row

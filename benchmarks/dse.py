@@ -1,0 +1,97 @@
+"""Design-space exploration benchmarks — paper Figs. 2, 3, 4 (SS III)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit, timed
+from repro.core.analytical import (
+    cri,
+    psum_memory_bandwidth,
+    tfu_cycles,
+    unit_input_bandwidth,
+    unit_latency_cycles,
+)
+from repro.core.config import AcceleratorConfig, Dataflow
+from repro.core.workloads import corner_case_workloads
+
+
+def _adip_cfg(cores: int, d: int, name: str) -> AcceleratorConfig:
+    return AcceleratorConfig(
+        name=name, dataflow=Dataflow.ADIP, units=1, cores=cores, d=d,
+        pipeline=4, adaptive=True, packed_weights=True,
+    )
+
+
+def fig2_single_vs_spatial() -> List[str]:
+    """One large 64x64 core vs 16 x (16x16) cores (same 4096 PEs)."""
+    single = _adip_cfg(1, 64, "single-64x64")
+    spatial = _adip_cfg(16, 16, "spatial-16x16x16")
+    rows = []
+    wl = corner_case_workloads()
+
+    def run():
+        out: Dict[str, float] = {}
+        for w in wl:
+            ls = unit_latency_cycles(single, w.m, w.k, w.n, w.weight_bits)
+            lp = unit_latency_cycles(spatial, w.m, w.k, w.n, w.weight_bits)
+            out[f"{w.stage}_x"] = ls / lp
+        out["tfu_x"] = tfu_cycles(single) / tfu_cycles(spatial)
+        out["input_bw_x"] = (unit_input_bandwidth(spatial)
+                             / unit_input_bandwidth(single))
+        out["psum_bw_x"] = (psum_memory_bandwidth(single, 4)
+                            / psum_memory_bandwidth(spatial, 4))
+        return out
+
+    res, us = timed(run)
+    # paper: proj 4x faster spatial; score 4x faster single; output similar;
+    # TFU 4x lower; input bw 4x higher; psum bw 4x lower
+    rows.append(emit("fig2_single_vs_spatial", us, res))
+    return rows
+
+
+LEGION_CONFIGS = [
+    ("2x64x64", 2, 64), ("4x32x32", 4, 32), ("8x16x16", 8, 16),
+    ("16x8x8", 16, 8),
+]
+
+
+def fig3_granularity() -> List[str]:
+    rows = []
+    wl = corner_case_workloads()
+    for name, c, d in LEGION_CONFIGS:
+        cfg = _adip_cfg(c, d, name)
+
+        def run():
+            out = {
+                "input_bw": unit_input_bandwidth(cfg),
+                "tfu": tfu_cycles(cfg),
+                "pes": cfg.total_pes,
+            }
+            for w in wl:
+                out[f"{w.stage}_cyc"] = unit_latency_cycles(
+                    cfg, w.m, w.k, w.n, w.weight_bits
+                )
+            return out
+
+        res, us = timed(run)
+        rows.append(emit(f"fig3_granularity_{name}", us, res))
+    return rows
+
+
+def fig4_cri() -> List[str]:
+    """CRI ranks 8x16x16 above 2x64x64 / 4x32x32 (paper's selection)."""
+    rows = []
+    wl = corner_case_workloads()
+    scores = {}
+    for name, c, d in LEGION_CONFIGS:
+        cfg = _adip_cfg(c, d, name)
+        (score,), us = timed(lambda cfg=cfg: (cri(cfg, wl),))
+        scores[name] = score
+        rows.append(emit(f"fig4_cri_{name}", us, {"cri": score}))
+    assert scores["8x16x16"] > scores["2x64x64"], "CRI ranking regressed"
+    assert scores["8x16x16"] > scores["4x32x32"], "CRI ranking regressed"
+    return rows
+
+
+def run() -> List[str]:
+    return fig2_single_vs_spatial() + fig3_granularity() + fig4_cri()

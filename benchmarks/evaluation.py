@@ -1,0 +1,180 @@
+"""Paper evaluation benchmarks — Figs. 6-10 and SS V-B/V-C.
+
+Reproduces the full WS / DiP / ADiP / D-Legion comparison on the attention
+workloads of BitNet-1.58B (MHA) and BitNet-1.58B-KV (GQA), plus the Legion
+scaling study and the TPUv4i comparison.  Paper headline targets are
+asserted within tolerance — this is the reproduction gate.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import emit, timed
+from repro.core import (
+    adip_64,
+    attention_workloads,
+    bitnet_1_58b,
+    bitnet_1_58b_kv,
+    compare,
+    dip_64,
+    dlegion,
+    simulate,
+    tpuv4i,
+    ws_64,
+)
+from repro.core.workloads import STAGES, total_ops
+
+ARCHS = lambda: [ws_64(), dip_64(), adip_64(), dlegion()]
+MODELS = [("bitnet-1.58b", bitnet_1_58b), ("bitnet-1.58b-kv",
+                                           bitnet_1_58b_kv)]
+
+
+def fig6_workload_distribution() -> List[str]:
+    rows = []
+    for name, spec_fn in MODELS:
+        wl = attention_workloads(spec_fn())
+
+        def run():
+            out = {w.stage + "_tops": w.ops / 1e12 for w in wl}
+            out["total_tops"] = total_ops(wl) / 1e12
+            return out
+
+        res, us = timed(run)
+        # paper: ~4.02 TOPs (MHA) / ~2.99 TOPs (GQA)
+        rows.append(emit(f"fig6_workloads_{name}", us, res))
+    return rows
+
+
+def _model_reports(spec_fn):
+    wl = attention_workloads(spec_fn())
+    return [simulate(cfg, wl) for cfg in ARCHS()]
+
+
+def fig7_latency() -> List[str]:
+    rows = []
+    for name, spec_fn in MODELS:
+        reports, us = timed(lambda: _model_reports(spec_fn))
+        derived = {}
+        for base in ("WS-64x64", "DiP-64x64", "ADiP-64x64"):
+            ratios = compare(reports, baseline=base)["D-Legion-8L"]
+            tag = base.split("-")[0].lower()
+            derived[f"total_x_{tag}"] = ratios["latency_x"]
+            derived[f"proj_x_{tag}"] = ratios["latency_x[qkv_proj]"]
+        rows.append(emit(f"fig7_latency_{name}", us, derived))
+    # paper gates (checked on the MHA model): 16.87x/16.4x/8.2x proj,
+    # 9.26x/8.84x/5.2x total — reproduce within 5%
+    reports = _model_reports(bitnet_1_58b)
+    r_ws = compare(reports, "WS-64x64")["D-Legion-8L"]
+    r_dip = compare(reports, "DiP-64x64")["D-Legion-8L"]
+    r_adip = compare(reports, "ADiP-64x64")["D-Legion-8L"]
+    assert abs(r_ws["latency_x[qkv_proj]"] - 16.87) / 16.87 < 0.05
+    assert abs(r_dip["latency_x[qkv_proj]"] - 16.4) / 16.4 < 0.05
+    assert abs(r_adip["latency_x[qkv_proj]"] - 8.2) / 8.2 < 0.05
+    assert abs(r_ws["latency_x"] - 9.26) / 9.26 < 0.05
+    assert abs(r_dip["latency_x"] - 8.84) / 8.84 < 0.05
+    assert abs(r_adip["latency_x"] - 5.2) / 5.2 < 0.05
+    return rows
+
+
+def fig8_throughput() -> List[str]:
+    rows = []
+    for name, spec_fn in MODELS:
+        reports, us = timed(lambda: _model_reports(spec_fn))
+        derived = {r.arch: r.total_tops for r in reports}
+        derived["peak_tops_proj"] = dlegion().peak_tops(4)
+        derived["peak_tops_actact"] = dlegion().peak_tops(1)
+        rows.append(emit(f"fig8_throughput_{name}", us, derived))
+    assert abs(dlegion().peak_tops(4) - 135.68) < 0.01
+    assert abs(dlegion().peak_tops(1) - 33.92) < 0.01
+    return rows
+
+
+def fig9_memory() -> List[str]:
+    rows = []
+    for name, spec_fn in MODELS:
+        reports, us = timed(lambda: _model_reports(spec_fn))
+        derived = {r.arch + "_gb": r.total_mem_gb for r in reports}
+        for base in ("DiP-64x64", "ADiP-64x64"):
+            ratios = compare(reports, baseline=base)["D-Legion-8L"]
+            derived[f"x_{base.split('-')[0].lower()}"] = ratios["mem_x"]
+        rows.append(emit(f"fig9_memory_{name}", us, derived))
+    # paper: total up to 2.5x vs ADiP, 4.25x vs DiP (MHA model)
+    reports = _model_reports(bitnet_1_58b)
+    assert abs(compare(reports, "ADiP-64x64")["D-Legion-8L"]["mem_x"]
+               - 2.5) / 2.5 < 0.05
+    # per-stage projection savings: 3.8x vs ADiP, 7.6x vs WS
+    adip, dleg = reports[2], reports[3]
+    proj_x = (adip.stages["qkv_proj"].mem_bytes
+              / dleg.stages["qkv_proj"].mem_bytes)
+    assert abs(proj_x - 3.8) / 3.8 < 0.05, proj_x
+    return rows
+
+
+def fig10_psum() -> List[str]:
+    rows = []
+    for name, spec_fn in MODELS:
+        reports, us = timed(lambda: _model_reports(spec_fn))
+        derived = {r.arch + "_gb": r.total_psum_gb for r in reports}
+        ratios = compare(reports, baseline="ADiP-64x64")["D-Legion-8L"]
+        derived["x_adip"] = ratios["psum_x"]
+        # per-stage max ratio (paper: up to 3x on attention score)
+        adip, dleg = reports[2], reports[3]
+        derived["max_stage_x"] = max(
+            adip.stages[s].psum_bytes / dleg.stages[s].psum_bytes
+            for s in STAGES
+        )
+        rows.append(emit(f"fig10_psum_{name}", us, derived))
+    reports = _model_reports(bitnet_1_58b)
+    ratios = compare(reports, "ADiP-64x64")["D-Legion-8L"]
+    assert abs(ratios["psum_x"] - 2.1) / 2.1 < 0.05
+    return rows
+
+
+def scaling_study() -> List[str]:
+    """SS V-B: linear Legion scaling; 64 Legions -> 1085.44 TOPS."""
+    rows = []
+    wl = attention_workloads(bitnet_1_58b())
+
+    def run():
+        out = {}
+        base = simulate(dlegion(8), wl)
+        for legions in (8, 16, 32, 64):
+            cfg = dlegion(legions)
+            rep = simulate(cfg, wl)
+            out[f"L{legions}_peak_tops"] = cfg.peak_tops(4)
+            out[f"L{legions}_speedup"] = (base.total_cycles
+                                          / rep.total_cycles)
+        return out
+
+    res, us = timed(run)
+    assert abs(res["L64_peak_tops"] - 1085.44) < 0.01
+    rows.append(emit("scaling_legions", us, res))
+    return rows
+
+
+def fig11_tpuv4i() -> List[str]:
+    """SS V-C: D-Legion V2 (32 Legions, 16384x4 PEs) vs modeled TPUv4i."""
+    rows = []
+    for name, spec_fn in MODELS:
+        wl = attention_workloads(spec_fn())
+
+        def run():
+            v2 = simulate(dlegion(32), wl)
+            tpu = simulate(tpuv4i(), wl)
+            return {
+                "latency_x": tpu.total_seconds / v2.total_seconds,
+                "throughput_x": v2.total_tops / tpu.total_tops,
+                "mem_x": tpu.total_mem_gb / v2.total_mem_gb,
+                "psum_x": tpu.total_psum_gb / v2.total_psum_gb,
+            }
+
+        res, us = timed(run)
+        # paper: up to 2.5x latency, 2.3x throughput, 2.7x memory; psum ~1x
+        rows.append(emit(f"fig11_tpuv4i_{name}", us, res))
+    return rows
+
+
+def run() -> List[str]:
+    return (fig6_workload_distribution() + fig7_latency()
+            + fig8_throughput() + fig9_memory() + fig10_psum()
+            + scaling_study() + fig11_tpuv4i())

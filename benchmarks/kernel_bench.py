@@ -1,0 +1,69 @@
+"""Kernel-level benchmarks (beyond paper): the TPU-native bitlinear win.
+
+On this CPU container Pallas runs in interpret mode (not representative of
+wall-clock), so the *measured* number is the XLA reference path, and the
+derived columns report the structural wins the kernel is built for:
+
+    weight_bytes_x — HBM weight traffic: bf16 dense vs 2-bit packed (4x...8x)
+    ztb_skip_x     — fraction of blocks skipped by the ZTB schedule
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.sparsity import csr_block_schedule, prune_block_structured
+from repro.kernels.bitlinear.ref import bitlinear_matmul_ref
+from repro.quant.packing import pack_2bit_kmajor
+
+
+def bitlinear_traffic() -> List[str]:
+    rows = []
+    m, k, n = 256, 2048, 2048
+    rng = np.random.default_rng(0)
+    w = rng.integers(-1, 2, size=(k, n)).astype(np.int8)
+    x = rng.integers(-128, 128, size=(m, k)).astype(np.int8)
+    wp = pack_2bit_kmajor(jnp.asarray(w))
+    xj = jnp.asarray(x)
+
+    fn = jax.jit(lambda a, b: bitlinear_matmul_ref(a, b))
+    _, us = timed(lambda: fn(xj, wp).block_until_ready())
+    bf16_bytes = k * n * 2
+    packed_bytes = wp.size  # uint8
+    rows.append(emit("kernel_bitlinear_2048", us, {
+        "weight_bytes_x": bf16_bytes / packed_bytes,
+        "gemm_gflop": 2 * m * k * n / 1e9,
+    }))
+    return rows
+
+
+def ztb_schedule_bench() -> List[str]:
+    rows = []
+    for sparsity in (0.0, 0.5, 0.75):
+        k, n, b = 4096, 4096, 128
+        rng = np.random.default_rng(1)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        w = prune_block_structured(w, block_k=b, block_n=b,
+                                   sparsity=sparsity)
+        nz = np.zeros((k // b, n // b), dtype=bool)
+        for i in range(k // b):
+            for j in range(n // b):
+                nz[i, j] = np.any(w[i*b:(i+1)*b, j*b:(j+1)*b] != 0)
+
+        (indices, counts), us = timed(lambda: csr_block_schedule(nz))
+        total = nz.size
+        rows.append(emit(f"kernel_ztb_sparsity_{sparsity}", us, {
+            "blocks_total": total,
+            "blocks_scheduled": int(counts.sum()),
+            "skip_frac": 1.0 - counts.sum() / total,
+            "grid_steps_x": total / max(int(counts.max()) * nz.shape[1], 1),
+        }))
+    return rows
+
+
+def run() -> List[str]:
+    return bitlinear_traffic() + ztb_schedule_bench()

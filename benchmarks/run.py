@@ -1,0 +1,36 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Paper headline ratios are
+asserted inside the figure benchmarks (fig7/fig8/fig9/fig10/scaling), so a
+green run IS the reproduction gate.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run dse fig7   # subsets
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import dse, evaluation, kernel_bench
+
+    which = set(sys.argv[1:])
+
+    def want(tag: str) -> bool:
+        return not which or any(w in tag for w in which)
+
+    print("name,us_per_call,derived")
+    rows = []
+    if want("dse"):
+        rows += dse.run()
+    if want("evaluation") or want("fig"):
+        rows += evaluation.run()
+    if want("kernel"):
+        rows += kernel_bench.run()
+    print(f"# {len(rows)} benchmark rows, all paper-headline asserts passed",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

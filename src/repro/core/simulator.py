@@ -1,0 +1,203 @@
+"""Cycle/traffic simulator for WS, DiP, ADiP, D-Legion and modeled TPUv4i.
+
+Reproduces the paper's evaluation methodology (SS V): for each attention stage
+workload it accounts
+
+    latency (cycles)           eq. (2) + the stage mapping policy (SS IV-C)
+    throughput (TOPS)          workload ops / latency
+    memory access (GB)         stationary weights + streamed activations,
+                               with NoC multicast reuse for D-Legion (SS IV-B)
+    psum memory access (GB)    read-modify-write rounds: (2*KT - 1) * M*N*4B,
+                               KT = ceil(K / (C*D)) — the Legion accumulators'
+                               spatial reduction divides RMW rounds by C
+
+Sparsity (ZTB, SS IV-A.4): fully-sparse windows skip KT steps (latency,
+memory, and psum all shrink); partially-sparse windows only gate cores
+(energy proxy, no latency change) — both accepted via ``ZTBStats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.analytical import tiles, unit_latency_cycles
+from repro.core.config import AcceleratorConfig
+from repro.core.sparsity import ZTBStats
+from repro.core.workloads import (
+    GEMMWorkload,
+    HEAD_PER_UNIT,
+    N_PARTITION,
+    STAGES,
+)
+
+
+@dataclasses.dataclass
+class StageResult:
+    stage: str
+    cycles: int = 0
+    ops: int = 0
+    weight_bytes: float = 0.0
+    act_bytes: float = 0.0
+    psum_bytes: float = 0.0
+
+    @property
+    def mem_bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes
+
+    def seconds(self, freq_hz: float) -> float:
+        return self.cycles / freq_hz
+
+    def tops(self, freq_hz: float) -> float:
+        if self.cycles == 0:
+            return 0.0
+        return self.ops / self.seconds(freq_hz) / 1e12
+
+
+@dataclasses.dataclass
+class SimReport:
+    arch: str
+    freq_hz: float
+    stages: Dict[str, StageResult]
+
+    @property
+    def total_cycles(self) -> int:
+        return sum(s.cycles for s in self.stages.values())
+
+    @property
+    def total_seconds(self) -> float:
+        return self.total_cycles / self.freq_hz
+
+    @property
+    def total_ops(self) -> int:
+        return sum(s.ops for s in self.stages.values())
+
+    @property
+    def total_tops(self) -> float:
+        return self.total_ops / self.total_seconds / 1e12
+
+    @property
+    def total_mem_gb(self) -> float:
+        return sum(s.mem_bytes for s in self.stages.values()) / 1e9
+
+    @property
+    def total_psum_gb(self) -> float:
+        return sum(s.psum_bytes for s in self.stages.values()) / 1e9
+
+
+def _padded_k(cfg: AcceleratorConfig, k: int) -> int:
+    t = math.ceil(k / (cfg.cores * cfg.d))
+    return t * cfg.cores * cfg.d
+
+
+def _simulate_workload(
+    cfg: AcceleratorConfig,
+    w: GEMMWorkload,
+    ztb: Optional[ZTBStats] = None,
+) -> StageResult:
+    res = StageResult(stage=w.stage, ops=w.ops)
+    r = cfg.r(w.weight_bits)
+    units = cfg.units
+    wbytes = cfg.weight_bytes_per_element(w.weight_bits)
+    k_pad = _padded_k(cfg, w.k)
+    mapping = cfg.mapping_override or w.mapping
+
+    # ---- effective per-unit GEMM shape under the mapping policy ---------- #
+    if units > 1 and mapping == N_PARTITION:
+        n_unit = math.ceil(w.n / units)
+        rounds = w.count                       # iterate instances (heads)
+        multicast_stream = True                # same act rows to all units
+    elif units > 1:  # HEAD_PER_UNIT
+        n_unit = w.n
+        rounds = math.ceil(w.count / units)
+        multicast_stream = w.shared_input      # same X to all Legions
+    else:
+        n_unit = w.n
+        rounds = w.count
+        multicast_stream = False
+
+    t = tiles(w.m, w.k, n_unit, d=cfg.d, c=cfg.cores, r=r)
+
+    # ---- ZTB sparsity: fully-sparse windows skip whole KT steps --------- #
+    skipped_kt = 0
+    if ztb is not None and ztb.fully_sparse_fraction > 0:
+        skipped_kt = int(t.kt * ztb.fully_sparse_fraction)
+
+    lat = unit_latency_cycles(
+        cfg, w.m, w.k, n_unit, w.weight_bits, skipped_kt=skipped_kt
+    )
+    res.cycles = lat * rounds * w.layers
+    kt_keep = (t.kt - skipped_kt) / t.kt if t.kt else 1.0
+
+    # ---- stationary (weight / KV) traffic -------------------------------- #
+    # Loaded once per tile; padded to full tile grid.  D-Legion multicasts
+    # the stationary KV tiles across the kv_group query heads (SS IV-B).
+    n_pad_total = t.nt * r * cfg.d * (units if mapping == N_PARTITION and
+                                      units > 1 else 1)
+    n_pad_total = min(n_pad_total, max(w.n, t.nt * r * cfg.d))
+    distinct = w.count / w.kv_group if (units > 1 and w.kv_group > 1) \
+        else w.count
+    res.weight_bytes = (
+        k_pad * n_pad_total * wbytes * distinct * w.layers * kt_keep
+    )
+
+    # ---- streamed (activation) traffic ----------------------------------- #
+    # The input matrix re-streams once per N-tile pass; NoC multicast shares
+    # one stream across Legions (SS IV-B "input broadcast", "8x reuse").
+    stream_bytes_once = w.m * k_pad * cfg.dtype_bytes  # activations
+    if multicast_stream:
+        res.act_bytes = stream_bytes_once * t.nt * rounds * w.layers * kt_keep
+    else:
+        res.act_bytes = (
+            stream_bytes_once * t.nt * rounds
+            * (units if units > 1 and mapping == N_PARTITION else 1)
+            * w.layers * kt_keep
+        )
+
+    # ---- psum traffic ----------------------------------------------------- #
+    # KT accumulation rounds; first is write-only, the rest read-modify-write.
+    kt_eff = max(t.kt - skipped_kt, 1)
+    rmw = 2 * kt_eff - 1
+    res.psum_bytes = w.m * w.n * 4.0 * rmw * w.count * w.layers
+    return res
+
+
+def simulate(
+    cfg: AcceleratorConfig,
+    workloads: Iterable[GEMMWorkload],
+    ztb: Optional[ZTBStats] = None,
+) -> SimReport:
+    stages: Dict[str, StageResult] = {}
+    for w in workloads:
+        use_ztb = ztb if w.weight_bits < 8 else None  # ZTB is on weights
+        r = _simulate_workload(cfg, w, use_ztb)
+        agg = stages.setdefault(w.stage, StageResult(stage=w.stage))
+        agg.cycles += r.cycles
+        agg.ops += r.ops
+        agg.weight_bytes += r.weight_bytes
+        agg.act_bytes += r.act_bytes
+        agg.psum_bytes += r.psum_bytes
+    return SimReport(arch=cfg.name, freq_hz=cfg.freq_hz, stages=stages)
+
+
+def compare(
+    reports: List[SimReport], baseline: str,
+) -> Dict[str, Dict[str, float]]:
+    """Ratios of ``baseline`` over each report (a ratio > 1 means the report's
+    architecture improves on the baseline — the paper's 'up to Nx' style)."""
+    base = next(r for r in reports if r.arch == baseline)
+    out: Dict[str, Dict[str, float]] = {}
+    for rep in reports:
+        row = {
+            "latency_x": base.total_seconds / rep.total_seconds,
+            "throughput_x": rep.total_tops / base.total_tops,
+            "mem_x": base.total_mem_gb / max(rep.total_mem_gb, 1e-30),
+            "psum_x": base.total_psum_gb / max(rep.total_psum_gb, 1e-30),
+        }
+        for st in STAGES:
+            if st in rep.stages and st in base.stages:
+                row[f"latency_x[{st}]"] = (
+                    base.stages[st].cycles / max(rep.stages[st].cycles, 1)
+                )
+        out[rep.arch] = row
+    return out

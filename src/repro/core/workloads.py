@@ -1,0 +1,153 @@
+"""Attention-workload extraction (paper SS V, Fig. 6).
+
+Decomposes a transformer attention layer (prefill pass over sequence length S)
+into the paper's four GEMM stages:
+
+    qkv_proj     activation-to-weight, 2-bit weights (R=4), H + 2*G workloads
+    attn_score   activation-to-activation Q @ K^T, int8 (R=1), H workloads
+    attn_output  activation-to-activation A @ V,   int8 (R=1), H workloads
+    out_proj     activation-to-weight, 2-bit weights (R=4), 1 workload
+
+Each workload carries the data-reuse multipliers the D-Legion NoC exploits
+(input multicast across Legions, KV multicast across GQA groups) so the
+simulator can account memory traffic per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List
+
+
+# Stage names (paper Figs. 6-10 x-axis).
+QKV_PROJ = "qkv_proj"
+ATTN_SCORE = "attn_score"
+ATTN_OUTPUT = "attn_output"
+OUT_PROJ = "out_proj"
+STAGES = (QKV_PROJ, ATTN_SCORE, ATTN_OUTPUT, OUT_PROJ)
+
+# Mapping policy per stage (paper SS IV-C):
+#   head_per_unit — each Legion takes one head workload, round-robin
+#   n_partition   — the workload's N dim is split across all Legions
+HEAD_PER_UNIT = "head_per_unit"
+N_PARTITION = "n_partition"
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMMWorkload:
+    """One GEMM: out[M,N] = act[M,K] @ w[K,N], repeated ``count`` times."""
+
+    stage: str
+    m: int
+    k: int
+    n: int
+    weight_bits: int        # 2 for ternary projections, 8 for act-to-act
+    count: int = 1          # independent instances (e.g. one per head)
+    # Data-reuse annotations (D-Legion NoC multicast, paper SS IV-B):
+    shared_input: bool = False   # all `count` instances stream the same input
+    kv_group: int = 1            # stationary matrix shared by kv_group heads
+    mapping: str = HEAD_PER_UNIT
+    layers: int = 1              # replicate per model layer
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n * self.count * self.layers
+
+    @property
+    def ops(self) -> int:
+        """Multiplications + additions (paper's 'workload size')."""
+        return 2 * self.macs
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Minimal attention geometry — constructed from any registry arch."""
+
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    seq_len: int
+    weight_bits: int = 2   # BitNet b1.58 ternary
+
+    @property
+    def attn_inner(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def kv_inner(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        return self.heads // self.kv_heads
+
+
+def bitnet_1_58b(seq_len: int = 2048) -> AttentionSpec:
+    """BitNet-1.58B: 32L, hidden 2560, 16 MHA heads x 128 (paper SS V)."""
+    return AttentionSpec(
+        name="BitNet-1.58B", layers=32, hidden=2560, heads=16, kv_heads=16,
+        head_dim=128, seq_len=seq_len,
+    )
+
+
+def bitnet_1_58b_kv(seq_len: int = 2048) -> AttentionSpec:
+    """BitNet-1.58B-KV: same but GQA with 4 KV heads (paper SS V)."""
+    return AttentionSpec(
+        name="BitNet-1.58B-KV", layers=32, hidden=2560, heads=16, kv_heads=4,
+        head_dim=128, seq_len=seq_len,
+    )
+
+
+def attention_workloads(spec: AttentionSpec) -> List[GEMMWorkload]:
+    """The paper's four attention stages for a prefill pass of S tokens."""
+    s, h, g, hd = spec.seq_len, spec.heads, spec.kv_heads, spec.head_dim
+    return [
+        # Q/K/V projections: one workload per produced head; all share the
+        # same streamed input X[S, hidden] (multicast across Legions).
+        GEMMWorkload(
+            stage=QKV_PROJ, m=s, k=spec.hidden, n=hd,
+            weight_bits=spec.weight_bits, count=h + 2 * g,
+            shared_input=True, mapping=HEAD_PER_UNIT, layers=spec.layers,
+        ),
+        # Attention scores Q @ K^T per query head; stationary K shared by
+        # each GQA group (KV multicast, reuse factor H/G).
+        GEMMWorkload(
+            stage=ATTN_SCORE, m=s, k=hd, n=s, weight_bits=8, count=h,
+            kv_group=spec.group_size, mapping=N_PARTITION, layers=spec.layers,
+        ),
+        # Attention output A @ V per head; stationary V shared per group.
+        GEMMWorkload(
+            stage=ATTN_OUTPUT, m=s, k=s, n=hd, weight_bits=8, count=h,
+            kv_group=spec.group_size, mapping=N_PARTITION, layers=spec.layers,
+        ),
+        # Output projection: single large GEMM, N-partitioned across Legions.
+        GEMMWorkload(
+            stage=OUT_PROJ, m=s, k=spec.attn_inner, n=spec.hidden,
+            weight_bits=spec.weight_bits, count=1,
+            mapping=N_PARTITION, layers=spec.layers,
+        ),
+    ]
+
+
+def total_ops(workloads) -> int:
+    return sum(w.ops for w in workloads)
+
+
+def corner_case_workloads(
+    seq_len: int = 2048, hidden: int = 2560, head_dim: int = 64,
+) -> List[GEMMWorkload]:
+    """DSE corner-case workloads (paper SS III-A/B): head size 64."""
+    return [
+        GEMMWorkload(stage=QKV_PROJ, m=seq_len, k=hidden, n=head_dim,
+                     weight_bits=2),
+        GEMMWorkload(stage=ATTN_SCORE, m=seq_len, k=head_dim, n=seq_len,
+                     weight_bits=8),
+        GEMMWorkload(stage=ATTN_OUTPUT, m=seq_len, k=seq_len, n=head_dim,
+                     weight_bits=8),
+    ]
+
+
+def iter_stage(workloads, stage: str) -> Iterator[GEMMWorkload]:
+    return (w for w in workloads if w.stage == stage)

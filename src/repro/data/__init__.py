@@ -1,0 +1,7 @@
+"""Data substrate: deterministic synthetic corpus + token shards + prefetch."""
+from repro.data.pipeline import (
+    Prefetcher,
+    TokenShardReader,
+    synthetic_batch,
+    write_token_shard,
+)

@@ -1,0 +1,10 @@
+"""Distribution substrate: sharding rules, collectives, pipeline stages."""
+from repro.distributed.sharding import (
+    Rules,
+    active_rules,
+    constrain,
+    make_rules,
+    param_shardings,
+    use_rules,
+)
+from repro.distributed.pipeline import bubble_fraction, gpipe

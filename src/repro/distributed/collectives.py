@@ -1,0 +1,82 @@
+"""Distributed-optimization tricks: int8 gradient compression with error
+feedback for the slow pod-interconnect axis.
+
+At 1000+ node scale the cross-pod (DCN) all-reduce dominates step time for
+data parallelism.  The paper's R=4 insight — sub-byte payloads quadruple
+effective bandwidth — applies verbatim to gradients: quantize each tensor
+to int8 with a per-tensor absmax scale before the pod-axis reduction and
+carry the quantization residual forward (error feedback keeps convergence
+unbiased in practice).
+
+``compressed_psum_pod`` is written for use inside ``jax.shard_map`` with a
+manual "pod" axis; the pure quantize/dequantize pieces are used standalone
+in tests and in the compressed train-step variant.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor absmax int8. Returns (q, scale) with x ~= q * scale."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(
+    grad: jnp.ndarray, error: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(grad + carried error) -> int8 payload; returns (q, scale, new_error)."""
+    g = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(g)
+    new_error = g - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def compressed_psum_pod(
+    grads: Any, errors: Any, axis_name: str = "pod",
+) -> Tuple[Any, Any]:
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
+
+    Each participant contributes an int8 tensor + f32 scale; the reduction
+    sums dequantized values (scales differ per participant, so we psum the
+    dequantized f32 — the wire payload in a real DCN implementation is the
+    int8 tensor + one scalar, 4x smaller than f32; XLA models this as the
+    int8 all-gather + local combine).
+    Returns (reduced_grads_mean, new_errors).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, scale, new_e = compress_with_feedback(g, e)
+        # all_gather the int8 payloads (the 4x-smaller wire transfer), then
+        # combine locally with each participant's scale
+        qs = jax.lax.all_gather(q, axis_name)           # [n, ...] int8
+        scales = jax.lax.all_gather(scale, axis_name)   # [n]
+        total = jnp.tensordot(
+            scales.astype(jnp.float32),
+            qs.astype(jnp.float32),
+            axes=([0], [0]),
+        )
+        return (total / n).astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = tdef.unflatten([o[0] for o in out])
+    new_e = tdef.unflatten([o[1] for o in out])
+    return new_g, new_e
+
+
+def init_error_state(grads_or_params: Any) -> Any:
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_or_params
+    )

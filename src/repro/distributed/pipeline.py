@@ -1,0 +1,88 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+At 1000+ chips the fourth axis (beyond data / tensor / expert) is pipeline
+stages across pod boundaries: only point-to-point `collective_permute`
+traffic crosses the slow links, instead of all-reduces.  This module
+implements the schedule as a `shard_map` over a ``stage`` axis:
+
+  * stage parameters live sharded [S, ...] over the axis (stage s holds
+    slice s);
+  * M microbatches flow through S stages in M + S - 1 ticks; each tick
+    every stage computes its resident microbatch and ships the activation
+    to the next stage with one `ppermute` (bubble fraction = (S-1)/(M+S-1),
+    the standard GPipe trade);
+  * the final outputs are recovered from the last stage with a masked
+    psum broadcast.
+
+The forward is differentiable (shard_map + ppermute transpose), so the same
+schedule backpropagates — the reverse permutes ARE the backward pipeline.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(
+    stage_fn: Callable,            # (stage_params, x) -> y  (same shape)
+    stage_params,                  # pytree, leaves [S, ...] (stage-major)
+    microbatches: jnp.ndarray,     # [M, ...] — same trailing shape as x
+    *,
+    mesh,
+    axis: str = "stage",
+) -> jnp.ndarray:
+    """Returns [M, ...]: microbatches after passing through all S stages."""
+    n_stages = mesh.shape[axis]
+    m = microbatches.shape[0]
+    ticks = m + n_stages - 1
+
+    def inner(params, mb):
+        # params leaves arrive as [1, ...] (this stage's slice); squeeze
+        params_local = jax.tree.map(lambda a: a[0], params)
+        s = jax.lax.axis_index(axis)
+        x_shape = mb.shape[1:]
+
+        def tick(carry, t):
+            buf_in, outputs = carry
+            # stage 0 injects microbatch t (zeros once drained)
+            inject = jnp.where(
+                t < m, mb[jnp.clip(t, 0, m - 1)], jnp.zeros(x_shape, mb.dtype)
+            )
+            x = jnp.where(s == 0, inject, buf_in)
+            y = stage_fn(params_local, x)
+            # ship to the next stage (last stage sends nowhere)
+            buf_next = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)]
+            )
+            # the last stage emits microbatch t-(S-1) at tick t
+            idx = t - (n_stages - 1)
+            take = (s == n_stages - 1) & (idx >= 0)
+            upd = outputs.at[jnp.clip(idx, 0, m - 1)].set(
+                jnp.where(take, y, outputs[jnp.clip(idx, 0, m - 1)])
+            )
+            return (buf_next, upd), None
+
+        buf0 = jnp.zeros(x_shape, mb.dtype)
+        out0 = jnp.zeros_like(mb)
+        (_, outputs), _ = jax.lax.scan(
+            tick, (buf0, out0), jnp.arange(ticks)
+        )
+        # broadcast the last stage's buffer to every stage
+        mask = (s == n_stages - 1).astype(outputs.dtype)
+        return jax.lax.psum(outputs * mask, axis)
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(spec_params, P()),
+        out_specs=P(),
+        check_vma=False,
+    )(stage_params, microbatches)
+
+
+def bubble_fraction(n_stages: int, microbatches: int) -> float:
+    """GPipe idle fraction — schedule planning helper."""
+    return (n_stages - 1) / (microbatches + n_stages - 1)

@@ -1,0 +1,306 @@
+"""Logical-axis sharding rules — the XLA mirror of D-Legion's orchestrator.
+
+The paper maps attention heads onto Legions, multicasts the input matrix to
+all Legions, and replicates KV tiles across GQA groups.  In XLA SPMD the
+same decisions are sharding specs:
+
+    heads -> "model" mesh axis        (a Legion ≙ a model-parallel shard)
+    batch -> ("pod", "data")          (independent workloads ≙ data parallel)
+    KV with kv_heads < model size     -> replicated (the KV multicast)
+    out-proj / FFN  N-partitioning    -> column/row-parallel TP
+    MoE experts -> "model"            (expert parallelism)
+    long-context decode: sequence -> "data" (flash-decoding style split)
+
+Models call :func:`constrain` with *logical* axis names; a context-local
+rule table maps them to mesh axes (or None).  Without an active rule table
+``constrain`` is a no-op, so unit tests and single-device runs never touch
+the mesh machinery.
+
+Parameter shardings are path-regex driven (:func:`param_shardings`):
+2-D (fsdp x tensor) sharding for large archs, pure tensor-parallel for
+small ones.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Rules:
+    """Active sharding rules: logical axis -> mesh axis (or None)."""
+
+    def __init__(self, mesh: Mesh, table: Dict[str, Optional[object]],
+                 param_table=None):
+        self.mesh = mesh
+        self.table = table
+        self.param_table = param_table
+
+    def spec(self, *logical: Optional[str]) -> P:
+        entries = [self.table.get(a) if a else None for a in logical]
+        # a mesh axis may appear at most once in a PartitionSpec: keep the
+        # first use, drop later duplicates (e.g. seq->model + heads->model)
+        used: set = set()
+        out = []
+        for e in entries:
+            axes = e if isinstance(e, tuple) else (e,) if e else ()
+            if any(a in used for a in axes):
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(e)
+        return P(*out)
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o rules)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs {logical}")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(*logical))
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Rule construction per (arch, shape, mesh)
+# --------------------------------------------------------------------------- #
+
+def _divisible(n: int, mesh: Mesh, axis: object) -> bool:
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def make_rules(cfg, mesh: Mesh, shape) -> Rules:
+    """Build the activation rule table for a (ModelConfig, ShapeConfig)."""
+    axes = set(mesh.axis_names)
+    batch_axes: Tuple = tuple(a for a in ("pod", "data") if a in axes)
+    batch_axis = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None
+    )
+    model_axis = "model" if "model" in axes else None
+    msize = mesh.shape.get("model", 1)
+
+    table: Dict[str, Optional[object]] = {
+        "batch": batch_axis if _divisible(shape.global_batch, mesh,
+                                          batch_axis) else None,
+        "seq": None,
+        "embed": None,
+        "ff": model_axis if _divisible(cfg.d_ff or cfg.d_inner, mesh,
+                                       model_axis) else None,
+        "vocab": model_axis,   # uneven vocab sharding is padded by SPMD
+        "heads": model_axis if cfg.n_heads and cfg.n_heads % msize == 0
+        else None,
+        "kv_heads": model_axis if cfg.kv_heads and cfg.kv_heads % msize == 0
+        else None,             # None = replicated KV ≙ the paper's multicast
+        "ssm_heads": model_axis if cfg.family in ("ssm", "hybrid")
+        and cfg.ssm_heads % msize == 0 else None,
+        "experts": model_axis if cfg.n_experts and
+        cfg.n_experts_total % msize == 0 else None,
+        "expert_cap": batch_axis,   # MoE capacity dim rides the batch axes
+        "ssm_state": None,
+        "d_inner": model_axis if cfg.family in ("ssm", "hybrid") and
+        _divisible(cfg.d_inner, mesh, model_axis) else None,
+    }
+    # MoE with sharded experts: the per-expert FFN dim must not also land on
+    # the model axis (a PartitionSpec may not repeat an axis).
+    if cfg.n_experts and table["experts"] is not None:
+        table["ff"] = None
+    # Context/sequence parallelism for attention-dominant families: the seq
+    # dim takes the model axis at block boundaries, attention runs as a
+    # shard_map with replicated (multicast) KV, and heads stay local.  The
+    # scan-carry remat residuals (L x [b, S, d]) shrink by the model-axis
+    # size — this is what makes the big train cells fit HBM.  SSM/hybrid
+    # stacks keep their sequential chunk scans unsharded instead.
+    if shape.kind in ("train", "prefill") and model_axis and \
+            shape.seq_len % (msize * 128) == 0 and \
+            cfg.family in ("dense", "moe", "encoder", "vlm"):
+        table["seq"] = model_axis
+        table["heads"] = None
+        table["kv_heads"] = None
+    # Long-context decode: batch tiny, KV sequence is the big axis — shard it
+    # over the data axis (flash-decoding style partial-softmax combine).
+    if shape.kind == "decode" and shape.global_batch < _axis_size(mesh,
+                                                                  batch_axis):
+        table["batch"] = None
+        table["seq"] = "data" if "data" in axes else None
+    fsdp = cfg.param_count() >= 3_000_000_000
+    return Rules(mesh, table,
+                 param_table=_param_rule_table(cfg, mesh, fsdp)
+                 if shape.kind == "train" else None)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return size
+
+
+# --------------------------------------------------------------------------- #
+# Parameter shardings (path-regex -> PartitionSpec)
+# --------------------------------------------------------------------------- #
+
+def _param_rule_table(cfg, mesh: Mesh, fsdp: bool) -> List[Tuple[str, P]]:
+    """Ordered (regex, spec) table; first match wins.
+
+    ``fsdp`` additionally shards the non-TP dimension over "data"
+    (2-D weight sharding for >= ~7B archs).
+    """
+    m = "model" if "model" in mesh.axis_names else None
+    d = "data" if (fsdp and "data" in mesh.axis_names) else None
+    msize = mesh.shape.get("model", 1)
+    heads_ok = cfg.n_heads and cfg.n_heads % msize == 0
+    kv_ok = cfg.kv_heads and cfg.kv_heads % msize == 0
+    experts_ok = cfg.n_experts and cfg.n_experts_total % msize == 0
+    table: List[Tuple[str, P]] = [
+        # embeddings / lm head: vocab-parallel only — fsdp'ing the d dim
+        # makes the token gather/scatter produce batch-replicated layouts
+        (r"embed/tokens$", P(m, None)),
+        (r"lm_head$", P(None, m)),
+        (r"frontend/.*", P(None, None) if True else P()),
+        # attention — column-parallel QKV, row-parallel out
+        (r"attn/wq$", P(d, m if heads_ok else None)),
+        (r"attn/wk$", P(d, m if kv_ok else None)),
+        (r"attn/wv$", P(d, m if kv_ok else None)),
+        (r"attn/wo$", P(m if heads_ok else None, d)),
+        (r"attn/(q_norm|k_norm)$", P(None)),
+        # dense mlp — swiglu column/row parallel
+        (r"mlp/w(1|3)$", P(d, m)),
+        (r"mlp/w2$", P(m, d)),
+        # moe — expert parallelism on the leading expert dim
+        (r"moe/router$", P(None, None)),
+        (r"moe/w(1|3)$", P(m if experts_ok else None, d,
+                           None if experts_ok else m)),
+        (r"moe/w2$", P(m if experts_ok else None,
+                       None if experts_ok else m, d)),
+        # mamba2 / ssd
+        (r"ssm/in_proj", P(d, m)),
+        (r"ssm/out_proj$", P(m, d)),
+        (r"ssm/(conv_w|conv_b)$", P(None, m)),
+        (r"ssm/(a_log|dt_bias|d_skip)$", P(m)),
+        (r"ssm/norm$", P(m)),
+        # norms and everything 1-D: replicate
+        (r".*(norm|ln_f|scale|bias).*", P(None)),
+    ]
+    return table
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], table) -> P:
+    for pat, spec in table:
+        if re.search(pat, path):
+            trimmed = list(spec)[: len(shape)] + [None] * max(
+                0, len(shape) - len(spec)
+            )
+            # drop axes that do not divide the dim (SPMD would pad weights;
+            # padded *weights* complicate checkpoints, so fall back)
+            out = []
+            for dim, ax in zip(shape, trimmed):
+                if ax is None:
+                    out.append(None)
+                    continue
+                out.append(ax)
+            return P(*out)
+    return P(*([None] * len(shape)))
+
+
+def _flatten_with_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten_with_paths(tree[k], f"{prefix}/{k}" if prefix
+                                           else k)
+    else:
+        yield prefix, tree
+
+
+def _fit_spec(mesh: Mesh, shape, spec) -> P:
+    """Trim/pad spec to rank; drop axes that don't divide the dim."""
+    entries = list(spec)[: len(shape)] + [None] * max(
+        0, len(shape) - len(spec)
+    )
+    fixed = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_shardings(cfg, mesh: Mesh, params_shape, *, fsdp: bool = False):
+    """Pytree of NamedSharding matching ``params_shape`` (a ShapeDtypeStruct
+    tree or real params).
+
+    Leaves under ``blocks/`` are layer-stacked [L, ...]: the spec applies
+    from dim 1 and the layer dim stays unsharded (sharding layers over a
+    mesh axis would force per-iteration stack gathers in the scan).
+    """
+    table = _param_rule_table(cfg, mesh, fsdp)
+
+    def assign(path_entries, leaf):
+        path = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p)))
+            for p in path_entries
+        )
+        spec = spec_for_path(path, leaf.shape, table)
+        if "blocks/" in path:
+            spec = P(*((None,) + tuple(spec)))
+        return NamedSharding(mesh, _fit_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def constrain_layer_params(layer_params, cfg=None, *, fsdp: bool = True):
+    """with_sharding_constraint on a single layer's params *inside* the scan
+    body.  The constraint is its own transpose, so cotangents (per-layer
+    gradients) inherit it too — XLA then reduce-scatters layer grads
+    instead of all-reducing the whole stacked carry."""
+    rules = _ACTIVE.get()
+    if rules is None or rules.param_table is None:
+        return layer_params
+
+    def assign(path_entries, leaf):
+        path = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p)))
+            for p in path_entries
+        )
+        spec = spec_for_path(path, leaf.shape, rules.param_table)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(rules.mesh,
+                                _fit_spec(rules.mesh, leaf.shape, spec))
+        )
+
+    return jax.tree_util.tree_map_with_path(assign, layer_params)

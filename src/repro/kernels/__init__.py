@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (public
+jit wrapper with backend selection) and ref.py (pure-jnp oracle):
+
+- bitlinear:       packed-ternary x int8 GEMM (projection mode, R=4 -> 4x
+                   HBM bandwidth), K-split VMEM psum accumulation
+- block_sparse:    ZTB-driven CSR-of-blocks GEMM with scalar prefetch
+- flash_attention: causal online-softmax attention w/ GQA KV multicast
+- ssd:             Mamba-2 chunked state-space scan (SSM/hybrid archs)
+"""

@@ -1,0 +1,59 @@
+"""Jitted public wrapper for the bitlinear kernel with backend selection.
+
+``backend="auto"`` uses the Pallas kernel on TPU and the jnp reference
+elsewhere; the dry-run always lowers the reference so ``cost_analysis()``
+sees real HLO.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitlinear.kernel import bitlinear_matmul as _pallas_matmul
+from repro.kernels.bitlinear.ref import bitlinear_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bitlinear_matmul(
+    x_int8: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    *,
+    bits: int = 2,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    **block_kw,
+) -> jnp.ndarray:
+    """Integer GEMM with packed sub-byte weights. Returns int32 [M, N]."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "reference"
+    if backend == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        return _pallas_matmul(
+            x_int8, w_packed, bits=bits, interpret=interpret, **block_kw
+        )
+    return bitlinear_matmul_ref(x_int8, w_packed, bits=bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "backend"))
+def bitlinear_apply(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    bits: int = 2,
+    backend: str = "reference",
+) -> jnp.ndarray:
+    """Full BitLinear serving op: quantize acts, integer GEMM, dequantize.
+
+    x: float [M, K] -> float [M, N].
+    """
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-5
+    xq = jnp.clip(jnp.round(x / s), -128, 127).astype(jnp.int8)
+    acc = bitlinear_matmul(xq, w_packed, bits=bits, backend=backend)
+    return acc.astype(x.dtype) * (s * w_scale).astype(x.dtype)

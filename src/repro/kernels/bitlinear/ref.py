@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the bitlinear kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.packing import unpack_2bit_kmajor, unpack_4bit_kmajor
+
+
+def bitlinear_matmul_ref(
+    x: jnp.ndarray, w_packed: jnp.ndarray, *, bits: int = 2,
+    out_dtype=jnp.int32,
+) -> jnp.ndarray:
+    """out[M, N] = x[M, K] @ unpack(w_packed)[K, N], int32 accumulation."""
+    if bits == 2:
+        w = unpack_2bit_kmajor(w_packed)
+    elif bits == 4:
+        w = unpack_4bit_kmajor(w_packed)
+    else:
+        raise ValueError(f"bits={bits}")
+    return jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(out_dtype)

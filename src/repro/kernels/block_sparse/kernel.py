@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: ZTB-driven block-sparse matmul (paper SS IV-A.4).
+
+D-Legion's zero-tile book records which weight tiles are structurally zero;
+the Legion mapper *skips fully-sparse windows entirely* — no weight/activation
+transfer, no compute, no accumulator update.
+
+TPU-native adaptation: a **CSR-of-blocks schedule with scalar prefetch**.
+For every N-tile column we prefetch (into SMEM) the list of its non-zero
+K-tile indices and their count.  The grid's K dimension enumerates only up
+to ``max_nnz`` steps; the BlockSpec ``index_map`` reads the prefetched
+indices so HBM->VMEM DMAs fetch *only non-zero blocks* (a zero block is
+never transferred — the exact semantics of window skipping), and ``pl.when``
+masks the ragged tail (partially-sparse windows ≙ deactivated cores).
+
+Schedule construction lives in ``repro.core.sparsity.csr_block_schedule``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _block_sparse_kernel(
+    # scalar-prefetch operands
+    idx_ref,      # int32 [NT, KT_pad] — non-zero K-tile ids per N column
+    cnt_ref,      # int32 [NT]        — number of valid entries
+    # tensor operands
+    x_ref,        # [bm, bk]
+    w_ref,        # [bk, bn]  (only non-zero blocks ever stream in)
+    out_ref,      # [bm, bn]
+    acc_ref,      # VMEM scratch [bm, bn] f32
+    *,
+    max_steps: int,
+):
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+    cnt = cnt_ref[j]
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < cnt)
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(s == max_steps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def block_sparse_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    indices: jnp.ndarray,   # int32 [NT, KT] from csr_block_schedule
+    counts: jnp.ndarray,    # int32 [NT]
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out[M, N] = x[M, K] @ w[K, N] skipping structurally-zero K-blocks.
+
+    ``indices``/``counts`` must be built with block shape (bk, bn) — i.e.
+    the ZTB tile granularity equals the kernel block granularity.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"K mismatch {k} vs {k2}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"({m},{k},{n}) not divisible by ({bm},{bk},{bn})")
+    nt = n // bn
+    if indices.shape[0] != nt:
+        raise ValueError("indices rows must equal N tiles")
+    max_steps = indices.shape[1]
+
+    grid = (m // bm, nt, max_steps)
+    kernel = functools.partial(_block_sparse_kernel, max_steps=max_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s, idx, cnt: (i, idx[j, s])),
+            pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, idx, cnt: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(indices, counts, x, w)

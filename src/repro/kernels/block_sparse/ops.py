@@ -1,0 +1,43 @@
+"""Public wrapper: builds the ZTB schedule and dispatches kernel/reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import csr_block_schedule
+from repro.kernels.block_sparse.kernel import block_sparse_matmul
+from repro.kernels.block_sparse.ref import block_sparse_matmul_ref
+
+
+def ztb_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block_nonzero: np.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Block-sparse matmul skipping ZTB-zero blocks.
+
+    ``block_nonzero`` is a *static* (offline, per the paper) numpy bool mask
+    of shape [K//bk, N//bn].
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        indices, counts = csr_block_schedule(block_nonzero)
+        # Trim the schedule to the densest column — fully-sparse windows
+        # beyond it never even appear in the grid.
+        max_nnz = max(int(counts.max()), 1)
+        indices = indices[:, :max_nnz]
+        return block_sparse_matmul(
+            x, w, jnp.asarray(indices), jnp.asarray(counts),
+            bm=bm, bn=bn, bk=bk, interpret=interpret,
+        )
+    return block_sparse_matmul_ref(x, w, block_nonzero, bk=bk, bn=bn)

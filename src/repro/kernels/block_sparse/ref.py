@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the block-sparse kernel: dense matmul over weights
+with zero blocks actually zeroed (the schedule and the mask must agree)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_sparse_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, block_nonzero: np.ndarray,
+    *, bk: int, bn: int,
+) -> jnp.ndarray:
+    """out = x @ (w masked to its non-zero blocks).
+
+    block_nonzero: bool [K//bk, N//bn].
+    """
+    kt, nt = block_nonzero.shape
+    mask = np.repeat(np.repeat(block_nonzero, bk, axis=0), bn, axis=1)
+    wm = w * jnp.asarray(mask, dtype=w.dtype)
+    return x @ wm

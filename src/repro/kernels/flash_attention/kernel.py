@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: causal flash attention with GQA head mapping.
+
+The attention-score and attention-output stages are the paper's
+activation-to-activation workloads (8b x 8b mode, R = 1).  On TPU the win is
+never materializing the S x S score matrix to HBM: the online-softmax
+accumulator lives in VMEM scratch — the same role the Legion accumulators +
+psum banks play for D-Legion (scores are "psums" that stay on-chip).
+
+GQA KV multicast (paper SS IV-B): the BlockSpec ``index_map`` points every
+query head at its group's KV head, so a KV block streams from HBM once per
+group rather than once per head — the NoC multicast in DMA form.
+
+Grid: (batch*heads, Sq/bq, Sk/bk), KV innermost; fully-causal-masked KV
+blocks are skipped with ``pl.when`` (compute only ~half the blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, out_ref,
+    m_ref, l_ref, acc_ref,
+    *, causal: bool, sm_scale: float, n_kv_tiles: int, bq: int, bk: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: KV block fully in the future => skip everything.
+    live = (j * bk <= i * bq + bq - 1) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0].astype(jnp.float32)           # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                # [bq, bk]
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                          # [bq, 1]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_kv_tiles - 1)
+    def _flush():
+        out_ref[0, ...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "bq", "bk", "q_heads", "kv_heads",
+                     "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,       # [B*H,  Sq, d]
+    k: jnp.ndarray,       # [B*Hkv, Sk, d]
+    v: jnp.ndarray,       # [B*Hkv, Sk, d]
+    *,
+    q_heads: int,
+    kv_heads: int,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if sq % bq or sk % bk:
+        raise ValueError(f"seq ({sq},{sk}) not divisible by ({bq},{bk})")
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    group = q_heads // kv_heads
+    n_kv_tiles = sk // bk
+
+    def kv_index(bh_idx, i, j):
+        b = bh_idx // q_heads
+        h = bh_idx % q_heads
+        return (b * kv_heads + h // group, j, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=sm_scale,
+        n_kv_tiles=n_kv_tiles, bq=bq, bk=bk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, n_kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

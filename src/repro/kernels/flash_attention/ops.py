@@ -1,0 +1,39 @@
+"""Public wrapper: [B, H, S, d] layout, backend selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jnp.ndarray,       # [B, H,   Sq, d]
+    k: jnp.ndarray,       # [B, Hkv, Sk, d]
+    v: jnp.ndarray,       # [B, Hkv, Sk, d]
+    *,
+    causal: bool = True,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    bq: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "reference"
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = _kernel(
+            qf, kf, vf, q_heads=h, kv_heads=hkv, causal=causal,
+            bq=bq, bk=bk, interpret=interpret,
+        )
+    else:
+        out = attention_ref(qf, kf, vf, q_heads=h, kv_heads=hkv,
+                            causal=causal)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle: full-softmax attention with GQA head mapping."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _softmax(s: jnp.ndarray) -> jnp.ndarray:
+    m = s.max(axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def attention_ref(
+    q: jnp.ndarray,       # [B*H,   Sq, d]
+    k: jnp.ndarray,       # [B*Hkv, Sk, d]
+    v: jnp.ndarray,       # [B*Hkv, Sk, d]
+    *,
+    q_heads: int,
+    kv_heads: int,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    b = bh // q_heads
+    group = q_heads // kv_heads
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    # expand kv to q heads (the kernel does this via its index_map instead)
+    k = k.reshape(b, kv_heads, sk, d)
+    v = v.reshape(b, kv_heads, sk, d)
+    k = jnp.repeat(k, group, axis=1).reshape(bh, sk, d)
+    v = jnp.repeat(v, group, axis=1).reshape(bh, sk, d)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    out = jnp.einsum("bqk,bkd->bqd", _softmax(s), v.astype(jnp.float32))
+    return out.astype(q.dtype)

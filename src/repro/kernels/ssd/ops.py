@@ -1,0 +1,37 @@
+"""Public SSD wrapper with backend selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_scan as _kernel
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_scan_ref
+
+
+def ssd(
+    dta: jnp.ndarray,
+    dtx: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    chunk: int = 128,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    return_state: bool = False,
+):
+    """Mamba-2 SSD: y[BH, S, P] from pre-scaled inputs (see kernel docs).
+
+    ``return_state=True`` additionally returns the terminal state
+    [BH, N, P] (prefill -> decode handoff); the Pallas kernel does not
+    emit state, so that path falls back to the chunked reference.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if backend == "pallas" and not return_state:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _kernel(dta, dtx, b, c, chunk=chunk, interpret=interpret)
+    if backend == "naive":
+        return ssd_scan_ref(dta, dtx, b, c, return_state=return_state)
+    return ssd_chunked_ref(dta, dtx, b, c, chunk=chunk,
+                           return_state=return_state)

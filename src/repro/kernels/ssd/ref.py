@@ -1,0 +1,152 @@
+"""Pure-jnp oracles for the SSD kernel.
+
+``ssd_scan_ref``      — exact per-timestep recurrence via lax.scan (ground
+                        truth; O(S) sequential).
+``ssd_chunked_ref``   — chunked SSD in plain jnp (same math as the kernel,
+                        used by the models layer for training since it is
+                        differentiable and XLA-friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    dta: jnp.ndarray,     # [BH, S]
+    dtx: jnp.ndarray,     # [BH, S, P]
+    b: jnp.ndarray,       # [BH, S, N]
+    c: jnp.ndarray,       # [BH, S, N]
+    *,
+    return_state: bool = False,
+):
+    """h_t = exp(dta_t) h_{t-1} + B_t (dtx_t)^T ;  y_t = C_t^T h_t."""
+    bh, s, p = dtx.shape
+    n = b.shape[-1]
+
+    def step(h, inputs):
+        dta_t, dtx_t, b_t, c_t = inputs
+        h = jnp.exp(dta_t)[:, None, None] * h + jnp.einsum(
+            "bn,bp->bnp", b_t, dtx_t
+        )
+        y = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((bh, n, p), dtype=jnp.float32)
+    xs = (
+        jnp.moveaxis(dta, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dtx, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(dtx.dtype)
+    return (y, h) if return_state else y
+
+
+def ssd_chunked_ref(
+    dta: jnp.ndarray,     # [BH, S]
+    dtx: jnp.ndarray,     # [BH, S, P]
+    b: jnp.ndarray,       # [BH, S, N]
+    c: jnp.ndarray,       # [BH, S, N]
+    *,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    """Chunked SSD — identical math to the Pallas kernel, pure jnp."""
+    bh, s, p = dtx.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    f32 = jnp.float32
+    dta_c = dta.reshape(bh, nc, chunk).astype(f32)
+    dtx_c = dtx.reshape(bh, nc, chunk, p).astype(f32)
+    b_c = b.reshape(bh, nc, chunk, n).astype(f32)
+    c_c = c.reshape(bh, nc, chunk, n).astype(f32)
+
+    la = jnp.cumsum(dta_c, axis=-1)                       # [bh, nc, q]
+    ii = jnp.arange(chunk)[:, None]
+    jj = jnp.arange(chunk)[None, :]
+    seg = jnp.where(ii >= jj, la[..., :, None] - la[..., None, :], -1e30)
+    decay = jnp.exp(seg)                                  # [bh, nc, q, q]
+    scores = jnp.einsum("bcin,bcjn->bcij", c_c, b_c) * decay
+    y_intra = jnp.einsum("bcij,bcjp->bcip", scores, dtx_c)
+
+    # inter-chunk state recurrence over chunks
+    la_tot = la[..., -1]                                  # [bh, nc]
+    decay_out = jnp.exp(la_tot[..., None] - la)           # [bh, nc, q]
+    chunk_state = jnp.einsum(                             # [bh, nc, n, p]
+        "bcjn,bcjp->bcnp", b_c * decay_out[..., None], dtx_c
+    )
+
+    def step(h, inputs):
+        la_tot_c, state_c, la_c, c_cc = inputs
+        y_inter = jnp.einsum("bin,bnp->bip", c_cc * jnp.exp(la_c)[..., None], h)
+        h = jnp.exp(la_tot_c)[:, None, None] * h + state_c
+        return h, y_inter
+
+    h0 = jnp.zeros((bh, n, p), dtype=f32)
+    xs = (
+        jnp.moveaxis(la_tot, 1, 0),
+        jnp.moveaxis(chunk_state, 1, 0),
+        jnp.moveaxis(la, 1, 0),
+        jnp.moveaxis(c_c, 1, 0),
+    )
+    h, y_inter = jax.lax.scan(step, h0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    y = y.reshape(bh, s, p).astype(dtx.dtype)
+    return (y, h) if return_state else y
+
+
+def ssd_grouped_scan(
+    dta: jnp.ndarray,     # [B, H, S]
+    dtx: jnp.ndarray,     # [B, H, S, P]
+    b: jnp.ndarray,       # [B, S, N]   — group-shared (Mamba-2 n_groups=1)
+    c: jnp.ndarray,       # [B, S, N]
+    *,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    """Production-memory chunked SSD: sequential scan over chunks (one
+    [B,H,q,q] tile live at a time — the all-chunks-vectorized variant
+    holds NC of them) and **group-shared scores**: C_i B_j^T is computed
+    once per batch, not once per head (B/C are shared across heads in
+    Mamba-2), cutting the score GEMM and its traffic by H.
+
+    Returns y [B, H, S, P] (+ final state [B, H, N, P]).
+    """
+    bsz, h, s, p = dtx.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    f32 = jnp.float32
+    dta_c = jnp.moveaxis(dta.reshape(bsz, h, nc, chunk), 2, 0).astype(f32)
+    dtx_c = jnp.moveaxis(dtx.reshape(bsz, h, nc, chunk, p), 2, 0).astype(f32)
+    b_c = jnp.moveaxis(b.reshape(bsz, nc, chunk, n), 1, 0).astype(f32)
+    c_c = jnp.moveaxis(c.reshape(bsz, nc, chunk, n), 1, 0).astype(f32)
+    ii = jnp.arange(chunk)[:, None]
+    jj = jnp.arange(chunk)[None, :]
+
+    def step(hst, xs):
+        dta_k, dtx_k, b_k, c_k = xs          # [B,H,q], [B,H,q,p], [B,q,n]x2
+        la = jnp.cumsum(dta_k, axis=-1)      # [B,H,q]
+        seg = jnp.where(ii >= jj,
+                        la[..., :, None] - la[..., None, :], -1e30)
+        decay = jnp.exp(seg)                 # [B,H,q,q]
+        group_scores = jnp.einsum("bin,bjn->bij", c_k, b_k)   # ONCE per B
+        y = jnp.einsum("bhij,bhjp->bhip",
+                       group_scores[:, None] * decay, dtx_k)
+        la_tot = la[..., -1]                                  # [B,H]
+        # inter-chunk state readout: (C_i * exp(la_i)) @ h_prev
+        y = y + jnp.einsum(
+            "bhin,bhnp->bhip",
+            c_k[:, None] * jnp.exp(la)[..., None], hst,
+        )
+        decay_out = jnp.exp(la_tot[..., None] - la)           # [B,H,q]
+        hst = jnp.exp(la_tot)[..., None, None] * hst + jnp.einsum(
+            "bhjn,bhjp->bhnp", b_k[:, None] * decay_out[..., None], dtx_k
+        )
+        return hst, y.astype(dtx.dtype)
+
+    h0 = jnp.zeros((bsz, h, n, p), f32)
+    hst, ys = jax.lax.scan(step, h0, (dta_c, dtx_c, b_c, c_c))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, s, p)
+    return (y, hst) if return_state else y

@@ -1,0 +1,457 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces — with ShapeDtypeStruct stand-ins, no real
+allocation —
+
+    compiled.memory_analysis()   -> proves the cell fits per-device HBM
+    compiled.cost_analysis()     -> FLOPs / bytes for the roofline
+    HLO collective parse         -> collective bytes for the roofline
+
+Results are cached incrementally to a JSON file so the 40-cell sweep can be
+resumed.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    applicable_shapes,
+    get_config,
+    shape_by_name,
+)
+from repro.configs.base import ALL_SHAPES
+from repro.distributed.sharding import make_rules, param_shardings, use_rules
+from repro.launch import hlo_cost
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, make_batch_spec
+from repro.train.optimizer import AdamW
+from repro.train.train_loop import TrainState, build_train_step
+
+# Dry-run compiles on the CPU host platform: kernels lower via the XLA
+# reference path (see DESIGN.md SS7), activations stay bf16.
+FSDP_THRESHOLD = 3_000_000_000   # params; 2-D (fsdp x tp) weight sharding
+
+
+# --------------------------------------------------------------------------- #
+# Sharding helpers
+# --------------------------------------------------------------------------- #
+
+def _vocab_axis(cfg, mesh, rules):
+    """Out-shardings (unlike wsc) require divisibility — uneven vocabs
+    (49155, 50280, 504) emit replicated logits at the jit boundary."""
+    ax = rules.table.get("vocab")
+    if ax is None:
+        return None
+    size = mesh.shape.get(ax, 1)
+    return ax if cfg.vocab % size == 0 else None
+
+
+def _batch_shardings(cfg, shape, mesh, rules, batch_spec):
+    b_ax = rules.table["batch"]
+    out = {}
+    for k, v in batch_spec.items():
+        spec = [b_ax] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def _cache_shardings(cfg, shape, mesh, rules, cache_shapes):
+    """Family-aware cache shardings (see DESIGN.md SS5)."""
+    b_ax = rules.table["batch"]
+    kv_ax = rules.table["kv_heads"]
+    msize = mesh.shape.get("model", 1)
+    # KV sequence axis: explicit data-sharding for long-context decode;
+    # otherwise put it on "model" when the heads cannot shard (the paper's
+    # KV-multicast regime; flash-decoding style sequence split).
+    seq_ax = rules.table["seq"]
+    if seq_ax is None and kv_ax is None and "model" in mesh.axis_names:
+        seq_ax = "model"
+
+    def assign(leaf):
+        shp = leaf.shape
+        if len(shp) == 5 and cfg.has_attention and shp[2] == cfg.kv_heads:
+            # [L/A, B, Hkv, S, hd]
+            return NamedSharding(mesh, P(None, b_ax, kv_ax, seq_ax, None))
+        if len(shp) == 5:
+            # SSD state [L, B, H, N, P]
+            h_ax = rules.table.get("ssm_heads")
+            return NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        if len(shp) == 4:
+            # conv state [L, B, conv_dim, k-1]
+            d_ax = rules.table.get("d_inner")
+            return NamedSharding(mesh, P(None, b_ax, d_ax, None))
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    return jax.tree.map(assign, cache_shapes)
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P(*([None] * jnp.ndim(x)))), tree,
+        is_leaf=lambda x: x is None,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Cell builders: (fn, example_args, in_shardings, out_shardings, donate)
+# --------------------------------------------------------------------------- #
+
+def build_train_cell(cfg, shape, mesh) -> Tuple:
+    api = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    rules = make_rules(cfg, mesh, shape)
+    state_shapes = jax.eval_shape(
+        lambda k: TrainState(
+            params=api.init(k), opt=opt.init(api.init(k)), ef=None
+        ),
+        jax.random.PRNGKey(0),
+    )
+    fsdp = cfg.param_count() >= FSDP_THRESHOLD
+    # (make_rules uses the same threshold for its in-scan param constraints)
+    p_sh = param_shardings(cfg, mesh, state_shapes.params, fsdp=fsdp)
+    step = build_train_step(api, opt, grad_shardings=p_sh)
+
+    def step_with_rules(state, batch):
+        with use_rules(rules):
+            return step(state, batch)
+
+    opt_sh = type(state_shapes.opt)(
+        step=NamedSharding(mesh, P()),
+        mu=param_shardings(cfg, mesh, state_shapes.opt.mu, fsdp=fsdp),
+        nu=param_shardings(cfg, mesh, state_shapes.opt.nu, fsdp=fsdp),
+    )
+    state_sh = TrainState(params=p_sh, opt=opt_sh, ef=None)
+    batch_spec = make_batch_spec(cfg, shape)
+    batch_sh = _batch_shardings(cfg, shape, mesh, rules, batch_spec)
+    metrics_sh = {
+        "loss": NamedSharding(mesh, P()),
+        "grad_norm": NamedSharding(mesh, P()),
+        "step": NamedSharding(mesh, P()),
+    }
+    return (
+        step_with_rules,
+        (state_shapes, batch_spec),
+        (state_sh, batch_sh),
+        (state_sh, metrics_sh),
+        (0,),
+    )
+
+
+def _serve_param_shapes(api):
+    return jax.eval_shape(lambda k: api.init(k), jax.random.PRNGKey(0))
+
+
+def build_prefill_cell(cfg, shape, mesh) -> Tuple:
+    # serving uses offline-quantized weights (ServeEngine.prepare_params):
+    # no per-step fake-quant math in the lowered step
+    cfg = cfg.replace(quantization="none")
+    api = build_model(cfg)
+    rules = make_rules(cfg, mesh, shape)
+    batch_spec = make_batch_spec(cfg, shape)
+    batch_spec.pop("targets", None)
+    params_shapes = _serve_param_shapes(api)
+    p_sh = param_shardings(cfg, mesh, params_shapes, fsdp=False)
+    batch_sh = _batch_shardings(cfg, shape, mesh, rules, batch_spec)
+
+    if not cfg.is_decoder:
+        # encoder: "prefill" = full inference forward (no cache exists)
+        def fwd(params, batch):
+            with use_rules(rules):
+                return api.train_logits(params, batch)
+
+        logits_sh = NamedSharding(
+            mesh, P(rules.table["batch"], None, _vocab_axis(cfg, mesh, rules))
+        )
+        return (fwd, (params_shapes, batch_spec), (p_sh, batch_sh),
+                logits_sh, ())
+
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len)
+    )
+    cache_sh = _cache_shardings(cfg, shape, mesh, rules, cache_shapes)
+
+    def prefill(params, batch, cache):
+        with use_rules(rules):
+            return api.prefill(params, batch, cache)
+
+    logits_sh = NamedSharding(
+        mesh, P(rules.table["batch"], None, _vocab_axis(cfg, mesh, rules))
+    )
+    return (
+        prefill,
+        (params_shapes, batch_spec, cache_shapes),
+        (p_sh, batch_sh, cache_sh),
+        (logits_sh, cache_sh),
+        (2,),
+    )
+
+
+_PACKABLE = ("wq", "wk", "wv", "wo", "w1", "w2", "w3", "in_proj_z",
+             "in_proj_xbc", "in_proj_dt", "out_proj", "lm_head")
+
+
+def _pack_tree(params_shapes, p_sh):
+    """ShapeDtypeStructs + shardings for the packed-ternary weight format:
+    each packable [.., K, N] bf16 leaf becomes {packed: uint8 [.., K/4, N],
+    scale: f32[]} — the 8x-smaller HBM payload of the paper's 2-bit mode."""
+    def walk(tree, sh):
+        out_t, out_s = {}, {}
+        for k in tree:
+            v, s = tree[k], sh[k]
+            if isinstance(v, dict):
+                out_t[k], out_s[k] = walk(v, s)
+            elif (k in _PACKABLE and v.ndim >= 2 and v.shape[-2] % 4 == 0
+                  and str(v.dtype) == "bfloat16"):
+                shp = v.shape[:-2] + (v.shape[-2] // 4, v.shape[-1])
+                out_t[k] = {
+                    "packed": jax.ShapeDtypeStruct(shp, jnp.uint8),
+                    "scale": jax.ShapeDtypeStruct((), jnp.float32),
+                }
+                out_s[k] = {
+                    "packed": s,
+                    "scale": NamedSharding(s.mesh, P()),
+                }
+            else:
+                out_t[k], out_s[k] = v, s
+        return out_t, out_s
+
+    return walk(params_shapes, p_sh)
+
+
+def _unpack_tree(packed_params):
+    """Inverse transform inside the lowered step (on TPU this runs in the
+    bitlinear kernel's VMEM; here it shows the packed HBM payload)."""
+    from repro.quant.packing import unpack_2bit_kmajor
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict) and "packed" in v and "scale" in v:
+                pk = v["packed"]
+                flat = pk.reshape((-1,) + pk.shape[-2:])
+                vals = jax.vmap(unpack_2bit_kmajor)(flat)
+                vals = vals.reshape(pk.shape[:-2] + (pk.shape[-2] * 4,
+                                                     pk.shape[-1]))
+                out[k] = (vals.astype(jnp.bfloat16)
+                          * v["scale"].astype(jnp.bfloat16))
+            elif isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = v
+        return out
+
+    return walk(packed_params)
+
+
+def build_decode_cell(cfg, shape, mesh, *, weight_format: str = "bf16"
+                      ) -> Tuple:
+    cfg = cfg.replace(quantization="none")  # see build_prefill_cell
+    api = build_model(cfg)
+    rules = make_rules(cfg, mesh, shape)
+    params_shapes = _serve_param_shapes(api)
+    p_sh = param_shardings(cfg, mesh, params_shapes, fsdp=False)
+    if weight_format == "packed2":
+        params_shapes, p_sh = _pack_tree(params_shapes, p_sh)
+    b = shape.global_batch
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(b, shape.seq_len)
+    )
+    cache_sh = _cache_shardings(cfg, shape, mesh, rules, cache_shapes)
+    token_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, token, cache, pos):
+        if weight_format == "packed2":
+            params = _unpack_tree(params)
+        with use_rules(rules):
+            return api.decode(params, token, cache, pos)
+
+    logits_sh = NamedSharding(
+        mesh, P(rules.table["batch"], None, _vocab_axis(cfg, mesh, rules))
+    )
+    return (
+        decode,
+        (params_shapes, token_spec, cache_shapes, pos_spec),
+        (p_sh, NamedSharding(mesh, P(rules.table["batch"])), cache_sh,
+         NamedSharding(mesh, P())),
+        (logits_sh, cache_sh),
+        (2,),
+    )
+
+
+def build_cell(cfg, shape, mesh, *, weight_format: str = "bf16"):
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh, weight_format=weight_format)
+
+
+# --------------------------------------------------------------------------- #
+# Runner
+# --------------------------------------------------------------------------- #
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             *, keep_hlo: bool = False,
+             weight_format: str = "bf16") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_cell(
+        cfg, shape, mesh, weight_format=weight_format)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    xla_cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    memory_stats = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes_per_device": (
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+    }
+    hlo = compiled.as_text()
+    # loop-aware cost: XLA's cost_analysis counts while bodies once (layer
+    # scans!) — repro.launch.hlo_cost multiplies by known trip counts.
+    la = hlo_cost.loop_aware_cost(hlo)
+    # kernel-adjusted memory: computations nested INSIDE the layer loop
+    # (flash-attention / SSD tile scans) stream tiles through HBM on the
+    # XLA reference path, but the production Pallas kernels keep them in
+    # VMEM — charge one tile's worth of I/O per outer iteration instead.
+    per = la["per_computation"]
+    # the layer scan is the *outermost* significant loop: smallest mult > 1
+    significant = [c for c in per.values()
+                   if c["mult"] > 1 and c["flops"] > 0.01 * max(la["flops"],
+                                                                1.0)]
+    layer_mult = min((c["mult"] for c in significant), default=1.0)
+    tile_savings = sum(
+        c["bytes"] * (1.0 - layer_mult / c["mult"])
+        for c in per.values() if c["mult"] > layer_mult
+    )
+    bytes_kernel_adj = la["bytes"] - tile_savings
+    report = rl.analyze(
+        arch=arch, shape_name=shape_name, mesh_name=mesh_name, chips=chips,
+        cost={"flops": la["flops"], "bytes accessed": la["bytes"]},
+        hlo_text="", cfg=cfg, shape=shape, memory_stats=memory_stats,
+        collectives=la["collectives"],
+    )
+    out = report.to_dict()
+    out["t_memory_kernel_adj"] = (
+        bytes_kernel_adj * chips / (chips * rl.HBM_BW)
+    )
+    t_step_adj = max(report.t_compute, out["t_memory_kernel_adj"],
+                     report.t_collective)
+    out["roofline_fraction_kernel_adj"] = (
+        report.model_flops / (chips * rl.PEAK_FLOPS) / t_step_adj
+        if t_step_adj else 0.0
+    )
+    out["xla_cost_flops_bodies_once"] = float(xla_cost.get("flops", 0.0))
+    out["top_computations"] = dict(sorted(
+        la["per_computation"].items(),
+        key=lambda kv: -(kv[1]["flops"] + kv[1]["bytes"]),
+    )[:8])
+    out["t_lower_s"] = round(t_lower, 1)
+    out["t_compile_s"] = round(t_compile, 1)
+    out["status"] = "ok"
+    if keep_hlo:
+        out["hlo"] = hlo
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-arch", default="qwen3-1.7b",
+                    help="--all verifies the multi-pod mesh on every arch "
+                    "for train_4k; other shapes run single-pod")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--weight-format", default="bf16",
+                    choices=["bf16", "packed2"],
+                    help="decode-cell weight payload (packed2 = the "
+                    "paper's 2-bit ternary mode, 8x smaller)")
+    args = ap.parse_args()
+
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def do(arch, shape_name, mesh_name):
+        key = f"{arch}|{shape_name}|{mesh_name}"
+        if key in results and results[key].get("status") == "ok" \
+                and not args.force:
+            print(f"[cached] {key}")
+            return
+        cfg = get_config(arch)
+        reason = applicable_shapes(cfg)[shape_name]
+        if reason != "run":
+            results[key] = {"status": "skipped", "reason": reason}
+            print(f"[skip]   {key}: {reason}")
+        else:
+            print(f"[run]    {key} ...", flush=True)
+            try:
+                results[key] = run_cell(arch, shape_name, mesh_name,
+                                        weight_format=args.weight_format)
+                r = results[key]
+                print(
+                    f"         ok: compile={r['t_compile_s']}s "
+                    f"bottleneck={r['bottleneck']} "
+                    f"roofline={r['roofline_fraction']:.3f} "
+                    f"peak_mem={r['memory_per_device']['peak_bytes_per_device']/1e9:.2f}GB",
+                    flush=True,
+                )
+            except Exception as e:  # a failure here is a bug in the system
+                results[key] = {
+                    "status": "error", "error": str(e)[:2000],
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"         ERROR: {e}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in ALL_SHAPES:
+                do(arch, shape.name, "single")
+        # multi-pod pass: every arch on its train-or-first-runnable shape
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            shapes = applicable_shapes(cfg)
+            first = next(s for s in shapes if shapes[s] == "run")
+            do(arch, first, "multi")
+    else:
+        do(args.arch, args.shape, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

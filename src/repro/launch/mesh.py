@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the "pod"
+axis is the slow DCN interconnect; data parallelism (optionally with int8
+compressed gradient exchange) runs across it.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 device; only dryrun forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(shape, axes):
+    """Arbitrary small meshes for tests (e.g. (2, 2, 2) on 8 host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))

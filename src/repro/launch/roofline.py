@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs    / (chips x peak_FLOP/s)
+    memory     = HLO_bytes    / (chips x HBM_bw)
+    collective = coll_bytes   / (chips x link_bw)
+
+``compiled.cost_analysis()`` (the post-SPMD, per-device module) provides
+FLOPs and bytes; collective bytes are parsed from the HLO text by summing
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  Per-device quantities are multiplied by
+chip count so the formulas above hold as written.
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# "  %name = <type> opcode(operands...), attrs"  (ROOT optional)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$"
+)
+
+
+def _type_bytes(type_str: str) -> float:
+    """Sum bytes over all shapes mentioned in a type string (incl. tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    for c in _COLLECTIVES:
+        if opcode == c or opcode.startswith(c + "-") or \
+                opcode.startswith(c + "."):
+            return c
+    return None
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind operand bytes, from the (per-device) HLO text."""
+    sizes: Dict[str, float] = {}
+    defs = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        sizes[name] = _type_bytes(type_str)
+        defs.append((name, type_str, opcode, rest))
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for name, type_str, opcode, rest in defs:
+        kind = _collective_kind(opcode)
+        if kind is None:
+            continue
+        # operand list = everything up to the matching close paren; operand
+        # names appear as %tokens (types may or may not be inlined)
+        args = rest.split(")")[0]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        op_bytes = sum(sizes.get(o, 0.0) for o in operands)
+        if op_bytes == 0.0:
+            # fall back to operand types inlined in the arg list, else the
+            # result size
+            op_bytes = _type_bytes(args) or _type_bytes(type_str)
+        out[kind] += op_bytes
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float           # global (per-device x chips)
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float         # 6*N*D train / 2*N*D inference
+    memory_per_device: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs time at peak / achievable step time (max of terms)."""
+        t_model = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_step if t_step else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D for inference forwards."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(
+    *, arch: str, shape_name: str, mesh_name: str, chips: int,
+    cost: Dict, hlo_text: str, cfg, shape,
+    memory_stats: Optional[Dict[str, float]] = None,
+    collectives: Optional[Dict[str, float]] = None,
+) -> RooflineReport:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = collectives if collectives is not None \
+        else collective_bytes(hlo_text)
+    coll_dev = sum(coll.values())
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_dev * chips, hlo_bytes=bytes_dev * chips,
+        coll_bytes=coll_dev * chips,
+        coll_breakdown={k: v * chips for k, v in coll.items()},
+        model_flops=model_flops(cfg, shape),
+        memory_per_device=memory_stats,
+    )

@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo (scan-over-layers, BitNet QAT integrated)."""
+from repro.models.registry import ModelAPI, build_model, make_batch_spec

@@ -1,0 +1,338 @@
+"""Multi-head attention with GQA/MQA, RoPE, qk-norm and KV caching.
+
+Head-over-"model"-axis sharding mirrors the paper's head-per-Legion mapping;
+replicated KV (kv_heads < model-axis size) mirrors the KV multicast.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import apply_rope, dense, dense_init, rms_norm, rope_angles
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # [B, Hkv, S_max, hd]
+    v: jnp.ndarray   # [B, Hkv, S_max, hd]
+
+
+def init_attn_params(key, cfg, dtype) -> dict:
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    quant = cfg.quantization == "bitnet"
+    q = dense(x, p["wq"], quantize=quant).reshape(b, s, cfg.n_heads, hd)
+    k = dense(x, p["wk"], quantize=quant).reshape(b, s, cfg.kv_heads, hd)
+    v = dense(x, p["wv"], quantize=quant).reshape(b, s, cfg.kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _tile_scores(qb, kb, qi, ki, bq, bk, causal, scale, q_offset=0):
+    """[b,hkv,g,bq,bk] masked scaled scores for one (q-block, kv-block).
+
+    ``q_offset`` shifts global query positions (context parallelism: each
+    seq shard masks against its true positions)."""
+    sc = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb) * scale
+    if causal:
+        qpos = q_offset + qi * bq + jnp.arange(bq)[:, None]
+        kpos = ki * bk + jnp.arange(bk)[None, :]
+        # barrier: stops XLA hoisting the (broadcast) mask out of the tile
+        # loops, which would materialize [b,h,nk,bq,bk] pred buffers
+        mask = jax.lax.optimization_barrier(qpos >= kpos)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    return sc
+
+
+def _flash_fwd_impl(q, k, v, q_offset, causal, bq, bk):
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    nq, nk = s // bq, t // bk
+    scale = 1.0 / (hd ** 0.5)
+    qt = q.reshape(b, nq, bq, hkv, g, hd).astype(jnp.float32)
+    kt = k.reshape(b, nk, bk, hkv, hd).astype(jnp.float32)
+    vt = v.reshape(b, nk, bk, hkv, hd).astype(jnp.float32)
+
+    def q_block(_, qi):
+        qb = qt[:, qi]                                   # [b,bq,hkv,g,hd]
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            sc = _tile_scores(qb, kt[:, ki], qi, ki, bq, bk, causal, scale,
+                              q_offset)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vt[:, ki]
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l[..., None]                         # [b,hkv,g,bq,hd]
+        lse = m + jnp.log(l)                             # [b,hkv,g,bq]
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    # lses [nq, b, hkv, g, bq] -> [b, hkv, g, s]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, s)
+    return out.astype(q.dtype), lse
+
+
+def _flash_bwd_impl(causal, bq, bk, res, dout):
+    """O(S)-memory flash backward: per-tile recompute of p from saved lse."""
+    q, k, v, q_offset, out, lse = res
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    nq, nk = s // bq, t // bk
+    scale = 1.0 / (hd ** 0.5)
+    f32 = jnp.float32
+    qt = q.reshape(b, nq, bq, hkv, g, hd).astype(f32)
+    kt = k.reshape(b, nk, bk, hkv, hd).astype(f32)
+    vt = v.reshape(b, nk, bk, hkv, hd).astype(f32)
+    dot = dout.reshape(b, nq, bq, hkv, g, hd).astype(f32)
+    # D_i = rowsum(dout * out)
+    dmat = (dout.astype(f32) * out.astype(f32)).sum(-1)   # [b,s,h]
+    dmat = dmat.reshape(b, nq, bq, hkv, g).transpose(0, 3, 4, 1, 2)
+    lset = lse.reshape(b, hkv, g, nq, bq)
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry                 # [b,nk,bk,hkv,hd] each
+        qb = qt[:, qi]
+        dob = dot[:, qi]                       # [b,bq,hkv,g,hd]
+        lse_i = lset[:, :, :, qi]              # [b,hkv,g,bq]
+        d_i = dmat[:, :, :, qi]                # [b,hkv,g,bq]
+
+        def kv_block(state, ki):
+            dq_b, dk_acc, dv_acc = state
+            sc = _tile_scores(qb, kt[:, ki], qi, ki, bq, bk, causal, scale,
+                              q_offset)
+            p = jnp.exp(sc - lse_i[..., None])            # [b,hkv,g,bq,bk]
+            dv_tile = jnp.einsum("bkgqt,bqkgd->btkd", p, dob)
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", dob, vt[:, ki])
+            ds = p * (dp - d_i[..., None]) * scale
+            dq_b = dq_b + jnp.einsum("bkgqt,btkd->bqkgd", ds, kt[:, ki])
+            dk_tile = jnp.einsum("bkgqt,bqkgd->btkd", ds, qb)
+            dk_acc = dk_acc.at[:, ki].add(dk_tile)
+            dv_acc = dv_acc.at[:, ki].add(dv_tile)
+            return (dq_b, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, bq, hkv, g, hd), f32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_block, (dq0, dk_acc, dv_acc), jnp.arange(nk)
+        )
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((b, nk, bk, hkv, hd), f32)
+    dv0 = jnp.zeros((b, nk, bk, hkv, hd), f32)
+    (dk, dv), dqs = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return (
+        dq.astype(q.dtype),
+        dk.reshape(b, t, hkv, hd).astype(k.dtype),
+        dv.reshape(b, t, hkv, hd).astype(v.dtype),
+        None,   # q_offset (int): no cotangent
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _flash(q, k, v, q_offset, causal, bq, bk):
+    return _flash_fwd_impl(q, k, v, q_offset, causal, bq, bk)[0]
+
+
+def _flash_fwd(q, k, v, q_offset, causal, bq, bk):
+    out, lse = _flash_fwd_impl(q, k, v, q_offset, causal, bq, bk)
+    return out, (q, k, v, q_offset, out, lse)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd_impl)
+
+
+def _flash_ref(q, k, v, *, causal: bool, bq: int = 512, bk: int = 256,
+               q_offset=0):
+    """Double-chunked online-softmax attention (custom_vjp: O(S) memory in
+    forward AND backward — per-tile recompute, saves only out + lse).
+
+    This is the XLA-path twin of kernels/flash_attention — required for the
+    32k prefill / 4k train cells to fit HBM.
+    q [B,S,H,hd]; k/v [B,T,Hkv,hd].
+    """
+    s, t = q.shape[1], k.shape[1]
+    bq = min(bq, s)
+    bk = min(bk, t)
+    return _flash(q, k, v, q_offset, causal, bq, bk)
+
+
+def _context_parallel_flash(q, k, v, *, causal: bool, rules):
+    """Context parallelism: queries shard over the "model" axis (their seq
+    dim), K/V replicate — the paper's KV multicast as a shard_map.  Each
+    shard runs a *local* flash over its query slice with globally-correct
+    causal masking via the position offset."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    seq_ax = rules.table["seq"]
+    b_ax = rules.table["batch"]
+    s = q.shape[1]
+    msize = mesh.shape[seq_ax] if isinstance(seq_ax, str) else 1
+    s_local = s // msize
+
+    def local(qs, ks, vs):
+        off = jax.lax.axis_index(seq_ax) * s_local
+        bq = min(512, s_local)
+        bk = min(256, ks.shape[1])
+        return _flash(qs, ks, vs, off, causal, bq, bk)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(b_ax, seq_ax, None, None), P(b_ax, None, None, None),
+                  P(b_ax, None, None, None)),
+        out_specs=P(b_ax, seq_ax, None, None),
+        check_vma=False,
+    )(q, k, v)
+
+
+# Sequences at or below this length use the plain einsum path (cheaper to
+# compile, fine for smoke tests); longer ones use the chunked flash path.
+FLASH_THRESHOLD = 2048
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=None, kv_len: Optional[int] = None):
+    """q [B,S,H,hd], k/v [B,T,Hkv,hd] — einsum attention, GQA via reshape."""
+    if (q.shape[1] > FLASH_THRESHOLD and q.shape[1] == k.shape[1]
+            and kv_len is None and q.shape[1] % 1024 == 0
+            and k.shape[1] % 512 == 0):
+        from repro.distributed.sharding import active_rules
+        rules = active_rules()
+        if rules is not None and rules.table.get("seq") is not None:
+            seq_ax = rules.table["seq"]
+            msize = rules.mesh.shape.get(seq_ax, 1)
+            if q.shape[1] % (msize * 128) == 0:
+                return _context_parallel_flash(q, k, v, causal=causal,
+                                               rules=rules)
+        return _flash_ref(q, k, v, causal=causal)
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (hd ** 0.5)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + (q_offset if q_offset is not None
+                                         else 0)
+        kpos = jnp.arange(t)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    elif kv_len is not None:
+        kpos = jnp.arange(t)
+        if jnp.ndim(kv_len) == 0:
+            mask = (kpos < kv_len)[None, None, None, None, :]
+        else:  # per-slot [B,1,1,1,1] lengths (continuous batching)
+            mask = kpos[None, None, None, None, :] < kv_len
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def attention(
+    p: dict, cfg, x: jnp.ndarray, *, positions: jnp.ndarray,
+    cache: Optional[KVCache] = None, cache_pos=None,
+) -> tuple:
+    """Full attention sub-layer.
+
+    Training/prefill: ``cache=None`` (or a cache to fill at [0, S)).
+    Decode: x is [B, 1, d]; ``cache_pos`` scalar write index.
+    Returns (out [B, S, d], new_cache).
+    """
+    b, s, _ = x.shape
+    quant = cfg.quantization == "bitnet"
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # under context parallelism "seq" carries the model axis and heads are
+    # local; otherwise heads take the model axis (head-per-Legion mapping)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None:
+        # decode: append this step's K/V, attend over the full cache.
+        # cache_pos may be a scalar (lockstep batch) or a per-slot [B]
+        # vector (continuous batching).
+        if jnp.ndim(cache_pos) == 1:
+            upd = jax.vmap(
+                lambda ck, kk, p: jax.lax.dynamic_update_slice(
+                    ck, kk, (0, p, 0)
+                )
+            )
+            kc = upd(cache.k, k.transpose(0, 2, 1, 3), cache_pos)
+            vc = upd(cache.v, v.transpose(0, 2, 1, 3), cache_pos)
+            kv_len = (cache_pos + 1)[:, None, None, None, None]
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache.k, k.transpose(0, 2, 1, 3), (0, 0, cache_pos, 0)
+            )
+            vc = jax.lax.dynamic_update_slice(
+                cache.v, v.transpose(0, 2, 1, 3), (0, 0, cache_pos, 0)
+            )
+            kv_len = cache_pos + 1
+        new_cache = KVCache(kc, vc)
+        kt = kc.transpose(0, 2, 1, 3)     # [B, S_max, Hkv, hd]
+        vt = vc.transpose(0, 2, 1, 3)
+        out = _sdpa(q, kt, vt, causal=False, kv_len=kv_len)
+    elif cache is not None:
+        # prefill: fill cache [0, S), causal attention over the prompt
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k.transpose(0, 2, 1, 3), (0, 0, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v.transpose(0, 2, 1, 3), (0, 0, 0, 0)
+        )
+        new_cache = KVCache(kc, vc)
+        out = _sdpa(q, k, v, causal=cfg.causal)
+    else:
+        out = _sdpa(q, k, v, causal=cfg.causal)
+
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    return dense(out, p["wo"], quantize=quant), new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype) -> KVCache:
+    shape = (batch, cfg.kv_heads, max_seq, cfg.head_dim_)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

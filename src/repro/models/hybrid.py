@@ -1,0 +1,244 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+applied before every ``attn_every``-th SSM block (weight-tied across
+applications, as in Zamba/Zamba2).
+
+Structure: the 81-layer stack is scanned as 13 *periods* of
+[shared-attn + 6 mamba blocks] plus a tail period of [shared-attn +
+3 mamba blocks] — applications land exactly at blocks 0, 6, ..., 78
+(14 total) without any ``lax.cond`` (conditionals would also make the
+dry-run cost attribution count both branches every layer).
+
+Simplifications vs. the released Zamba2 (noted in DESIGN.md): no per-
+application LoRA deltas on the shared block and no concatenation with the
+initial embedding — the shared block consumes the running hidden state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, constrain_layer_params
+from repro.models import mamba2
+from repro.models.attention import KVCache, attention, init_attn_params
+from repro.models.common import (
+    dense_init,
+    dtype_of,
+    embed_init,
+    maybe_remat,
+    rms_norm,
+    swiglu,
+)
+
+
+class HybridCache(NamedTuple):
+    conv: jnp.ndarray    # [L, B, conv_dim, k-1]
+    state: jnp.ndarray   # [L, B, H, N, P]
+    k: jnp.ndarray       # [A, B, Hkv, S_max, hd]  — shared-attn KV
+    v: jnp.ndarray
+
+
+def n_attn_apps(cfg) -> int:
+    return math.ceil(cfg.layers / cfg.attn_every)
+
+
+def _periods(cfg) -> Tuple[int, int]:
+    """(full periods, tail mamba layers). layers = p*attn_every + tail."""
+    p = cfg.layers // cfg.attn_every
+    tail = cfg.layers - p * cfg.attn_every
+    if tail == 0:      # last period is full; no separate tail app
+        p -= 1
+        tail = cfg.attn_every
+    return p, tail
+
+
+def init_params(cfg, key) -> Dict:
+    dtype = dtype_of(cfg)
+    k_embed, k_layers, k_attn, k_mlp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.layers)
+
+    def one(k):
+        return {
+            "ln": jnp.ones((cfg.d_model,), dtype),
+            "ssm": mamba2.init_ssm_params(k, cfg, dtype),
+        }
+
+    km = jax.random.split(k_mlp, 3)
+    return {
+        "embed": {"tokens": embed_init(k_embed, cfg.vocab, cfg.d_model,
+                                       dtype)},
+        "blocks": jax.vmap(one)(layer_keys),
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attn_params(k_attn, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": {
+                "w1": dense_init(km[0], cfg.d_model, cfg.d_ff, dtype),
+                "w2": dense_init(km[1], cfg.d_ff, cfg.d_model, dtype),
+                "w3": dense_init(km[2], cfg.d_model, cfg.d_ff, dtype),
+            },
+        },
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _shared_block(cfg, shared, x, positions, cache=None, cache_pos=None):
+    h = rms_norm(x, shared["ln1"])
+    attn_out, new_cache = attention(
+        shared["attn"], cfg, h, positions=positions, cache=cache,
+        cache_pos=cache_pos,
+    )
+    x = x + attn_out
+    h = rms_norm(x, shared["ln2"])
+    x = x + swiglu(h, shared["mlp"]["w1"], shared["mlp"]["w2"],
+                   shared["mlp"]["w3"],
+                   quantize=cfg.quantization == "bitnet")
+    return x, new_cache
+
+
+def _split_blocks(cfg, tree):
+    """blocks stacked [L, ...] -> (periods [P, E, ...], tail [T, ...])."""
+    p, tail = _periods(cfg)
+    e = cfg.attn_every
+    head = jax.tree.map(
+        lambda a: a[: p * e].reshape(p, e, *a.shape[1:]), tree
+    )
+    rest = jax.tree.map(lambda a: a[p * e:], tree)
+    return head, rest
+
+
+def _mamba_stack(cfg, x, layer_params, caches=None, decode=False):
+    """Inner scan over one period's mamba blocks. caches: (conv, state)."""
+
+    if caches is None:
+        def body(carry, lp):
+            h = rms_norm(carry, lp["ln"])
+            y, _, _ = mamba2.ssm_block(lp["ssm"], cfg, h)
+            return carry + y, None
+
+        x, _ = jax.lax.scan(body, x, layer_params)
+        return x, None
+
+    def body(carry, xs):
+        lp, conv0, state0 = xs
+        h = rms_norm(carry, lp["ln"])
+        if decode:
+            y, conv_st, ssd_st = mamba2.ssm_block(
+                lp["ssm"], cfg, h, conv_state=conv0, ssd_state=state0,
+                decode=True,
+            )
+        else:
+            y, conv_st, ssd_st = mamba2.ssm_block(lp["ssm"], cfg, h,
+                                                  return_state=True)
+            conv_st = conv_st if conv_st is not None else conv0
+        return carry + y, (conv_st, ssd_st)
+
+    x, new_caches = jax.lax.scan(body, x, (layer_params,) + caches)
+    return x, new_caches
+
+
+def forward_train(cfg, params, batch) -> jnp.ndarray:
+    x = params["embed"]["tokens"][batch["tokens"]]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    shared = params["shared"]
+    head, tail = _split_blocks(cfg, params["blocks"])
+
+    def period(carry, period_params):
+        period_params = constrain_layer_params(period_params, cfg)
+        y, _ = _shared_block(cfg, shared, carry, positions)
+        y, _ = _mamba_stack(cfg, y, period_params)
+        return y, None
+
+    period = maybe_remat(period, cfg)
+    x, _ = jax.lax.scan(period, x, head)
+    x, _ = _shared_block(cfg, shared, x, positions)
+    x, _ = _mamba_stack(cfg, x, tail)
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["embed"]["tokens"].T
+    return constrain(logits, "batch", None, "vocab")
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> HybridCache:
+    dtype = dtype_of(cfg)
+    ssm = mamba2.init_cache(cfg, batch, max_seq)
+    apps = n_attn_apps(cfg)
+    kv_shape = (apps, batch, cfg.kv_heads, max_seq, cfg.head_dim_)
+    return HybridCache(
+        conv=ssm.conv, state=ssm.state,
+        k=jnp.zeros(kv_shape, dtype), v=jnp.zeros(kv_shape, dtype),
+    )
+
+
+def _forward_cached(cfg, params, x, positions, cache: HybridCache,
+                    cache_pos, decode: bool):
+    shared = params["shared"]
+    p, _ = _periods(cfg)
+    head, tail = _split_blocks(cfg, params["blocks"])
+    conv_h, conv_t = (jax.tree.map(
+        lambda a: a[: p * cfg.attn_every].reshape(p, cfg.attn_every,
+                                                  *a.shape[1:]),
+        cache.conv), jax.tree.map(lambda a: a[p * cfg.attn_every:],
+                                  cache.conv))
+    state_h = cache.state[: p * cfg.attn_every].reshape(
+        p, cfg.attn_every, *cache.state.shape[1:]
+    )
+    state_t = cache.state[p * cfg.attn_every:]
+
+    def period(carry, xs):
+        period_params, conv0, state0, kv_k, kv_v = xs
+        y, new_kv = _shared_block(cfg, shared, carry, positions,
+                                  cache=KVCache(kv_k, kv_v),
+                                  cache_pos=cache_pos)
+        y, (conv_st, ssd_st) = _mamba_stack(cfg, y, period_params,
+                                            caches=(conv0, state0),
+                                            decode=decode)
+        return y, (conv_st, ssd_st, new_kv.k, new_kv.v)
+
+    x, (conv_h2, state_h2, kv_k_h, kv_v_h) = jax.lax.scan(
+        period, x, (head, conv_h, state_h, cache.k[:p], cache.v[:p])
+    )
+    # tail period: one shared-attn application + remaining mamba layers
+    x, new_kv = _shared_block(cfg, shared, x, positions,
+                              cache=KVCache(cache.k[p], cache.v[p]),
+                              cache_pos=cache_pos)
+    x, (conv_t2, state_t2) = _mamba_stack(cfg, x, tail,
+                                          caches=(conv_t, state_t),
+                                          decode=decode)
+    new_cache = HybridCache(
+        conv=jnp.concatenate(
+            [conv_h2.reshape(-1, *conv_h2.shape[2:]), conv_t2]
+        ),
+        state=jnp.concatenate(
+            [state_h2.reshape(-1, *state_h2.shape[2:]), state_t2]
+        ),
+        k=jnp.concatenate([kv_k_h, new_kv.k[None]]),
+        v=jnp.concatenate([kv_v_h, new_kv.v[None]]),
+    )
+    return x, new_cache
+
+
+def forward_prefill(cfg, params, batch, cache: HybridCache):
+    x = params["embed"]["tokens"][batch["tokens"]]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, new_cache = _forward_cached(cfg, params, x, positions, cache,
+                                   cache_pos=None, decode=False)
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, -1:, :] @ params["embed"]["tokens"].T
+    return logits, new_cache
+
+
+def forward_decode(cfg, params, token, cache: HybridCache, pos):
+    x = params["embed"]["tokens"][token][:, None, :]
+    if jnp.ndim(pos) == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    x, new_cache = _forward_cached(cfg, params, x, positions, cache,
+                                   cache_pos=pos, decode=True)
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["embed"]["tokens"].T
+    return logits, new_cache

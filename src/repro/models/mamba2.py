@@ -1,0 +1,304 @@
+"""Mamba-2 (SSD) model — attention-free SSM family (mamba2-130m) and the
+block reused by the Zamba2-style hybrid.
+
+Block structure (faithful to Mamba-2):
+    in_proj -> [z | xBC | dt];  xBC -> causal depthwise conv -> silu
+    SSD scan over (x, B, C) with per-head decay a_t = exp(dt * A)
+    gated RMSNorm (norm(y) * silu(z)) -> out_proj
+
+The SSD scan runs through kernels/ssd (Pallas on TPU, chunked jnp here).
+The paper's technique applies to the in/out projections (BitLinear ternary);
+the scan itself is dense f32 — recorded in DESIGN.md SSArch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, constrain_layer_params
+from repro.kernels.ssd.ops import ssd
+from repro.models.common import (
+    best_grouping,
+    dense,
+    dense_init,
+    dtype_of,
+    embed_init,
+    maybe_remat,
+    rms_norm,
+)
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # [L, B, conv_dim, k-1] — depthwise conv history
+    state: jnp.ndarray  # [L, B, H, N, P]       — SSD recurrent state
+
+
+def _dims(cfg) -> Tuple[int, int, int, int]:
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    return di, nh, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def conv_dim(cfg) -> int:
+    di, _, n, _ = _dims(cfg)
+    return di + 2 * n     # x plus B and C streams go through the conv
+
+
+def init_ssm_params(key, cfg, dtype) -> dict:
+    di, nh, n, _ = _dims(cfg)
+    cd = conv_dim(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        # split input projections (z | xBC | dt): one fused [d, 2di+2n+nh]
+        # output can't shard cleanly on the model axis (the split points
+        # don't align with shard boundaries), so each stream projects
+        # separately — same FLOPs, shardable outputs
+        "in_proj_z": dense_init(ks[0], cfg.d_model, di, dtype),
+        "in_proj_xbc": dense_init(ks[1], cfg.d_model, cd, dtype),
+        "in_proj_dt": dense_init(ks[2], cfg.d_model, nh, dtype),
+        "out_proj": dense_init(ks[3], di, cfg.d_model, dtype),
+        "conv_w": (jax.random.normal(ks[4], (cfg.conv_kernel, cd))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(a_log)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over sequence. xbc [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def ssm_block(
+    p: dict, cfg, x: jnp.ndarray, *,
+    conv_state: Optional[jnp.ndarray] = None,
+    ssd_state: Optional[jnp.ndarray] = None,
+    decode: bool = False,
+    return_state: bool = False,
+):
+    """x [B, S, d] -> (y [B, S, d], new_conv_state, new_ssd_state).
+
+    Training/prefill: full-sequence path (conv over S, chunked SSD);
+    ``return_state=True`` also yields the terminal SSD state (prefill).
+    Decode (S == 1): single-step recurrence using the cached states.
+    """
+    b, s, _ = x.shape
+    di, nh, n, hd = _dims(cfg)
+    quant = cfg.quantization == "bitnet"
+    # inner activations shard over the model axis (depthwise conv and the
+    # per-head SSD are channel/head-local, so this costs no collectives)
+    z = constrain(dense(x, p["in_proj_z"], quantize=quant),
+                  "batch", "seq", "d_inner")
+    xbc = constrain(dense(x, p["in_proj_xbc"], quantize=quant),
+                    "batch", "seq", "d_inner")
+    dt = constrain(dense(x, p["in_proj_dt"], quantize=quant),
+                   "batch", "seq", "ssm_heads")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    a = -jnp.exp(p["a_log"])                                     # [nh]
+
+    if decode:
+        # roll the conv history and apply the kernel at one step
+        k = cfg.conv_kernel
+        hist = jnp.concatenate([conv_state, xbc.transpose(0, 2, 1)], axis=-1)
+        new_conv_state = hist[..., 1:]
+        xbc_t = jnp.einsum("bck,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+        xbc_t = jax.nn.silu(xbc_t)[:, None, :]                   # [B,1,cd]
+    else:
+        xbc_t = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xbc_t = constrain(xbc_t, "batch", "seq", "d_inner")
+        # cache the last k-1 conv inputs for subsequent decoding
+        k = cfg.conv_kernel
+        new_conv_state = xbc.transpose(0, 2, 1)[..., -(k - 1):] if s >= k - 1 \
+            else None
+
+    xs = xbc_t[..., :di]                     # [B,S,di]
+    bmat = xbc_t[..., di:di + n]             # [B,S,N] (single group)
+    cmat = xbc_t[..., di + n:]               # [B,S,N]
+
+    xh = xs.reshape(b, s, nh, hd)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+
+    if decode:
+        # exact one-step recurrence: h = exp(dt a) h + dt B x^T; y = C h
+        dta = (dt[:, 0] * a[None, :])                      # [B,nh]
+        dtx = xh[:, 0] * dt[:, 0][..., None]               # [B,nh,hd]
+        h = jnp.exp(dta)[..., None, None] * ssd_state + jnp.einsum(
+            "bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32),
+            dtx.astype(jnp.float32),
+        )
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h)
+        new_ssd_state = h
+        y = y.reshape(b, 1, di)
+    else:
+        # chunked SSD over the full sequence
+        chunk = min(cfg.ssd_chunk, s)
+        # pad to a chunk multiple; padded steps have dta=0 (decay 1) and
+        # zero inputs, so outputs and terminal state are unaffected
+        s_pad = (-s) % chunk
+        dta_h = (dt * a[None, None, :]).transpose(0, 2, 1)     # [B,H,S]
+        dtx_h = (xh * dt[..., None]).transpose(0, 2, 1, 3)     # [B,H,S,hd]
+        if s_pad:
+            dta_h = jnp.pad(dta_h, ((0, 0), (0, 0), (0, s_pad)))
+            dtx_h = jnp.pad(dtx_h, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+            bp = jnp.pad(bmat, ((0, 0), (0, s_pad), (0, 0)))
+            cp = jnp.pad(cmat, ((0, 0), (0, s_pad), (0, 0)))
+        else:
+            bp, cp = bmat, cmat
+        if cfg.kernel_backend == "pallas":
+            # the Pallas kernel takes per-head flattened inputs
+            bh_b = jnp.broadcast_to(
+                bp[:, None], (b, nh, s + s_pad, n)
+            ).reshape(b * nh, s + s_pad, n)
+            bh_c = jnp.broadcast_to(
+                cp[:, None], (b, nh, s + s_pad, n)
+            ).reshape(b * nh, s + s_pad, n)
+            out = ssd(dta_h.reshape(b * nh, -1).astype(jnp.float32),
+                      dtx_h.reshape(b * nh, -1, hd).astype(jnp.float32),
+                      bh_b.astype(jnp.float32), bh_c.astype(jnp.float32),
+                      chunk=chunk, backend="pallas",
+                      return_state=return_state)
+            if return_state:
+                y, h_final = out
+                new_ssd_state = h_final.reshape(b, nh, n, hd)
+            else:
+                y, new_ssd_state = out, None
+            y = y.reshape(b, nh, -1, hd)
+        else:
+            # group-shared scores + chunk scan: one [B,H,q,q] tile live,
+            # C B^T computed once per batch instead of once per head
+            from repro.kernels.ssd.ref import ssd_grouped_scan
+            out = ssd_grouped_scan(
+                dta_h.astype(jnp.float32), dtx_h.astype(jnp.float32),
+                bp.astype(jnp.float32), cp.astype(jnp.float32),
+                chunk=chunk, return_state=return_state,
+            )
+            if return_state:
+                y, new_ssd_state = out
+            else:
+                y, new_ssd_state = out, None
+        if s_pad:
+            y = y[:, :, :s]
+        y = y.transpose(0, 2, 1, 3)
+        y = y.reshape(b, s, di)
+
+    y = y + (xh.reshape(b, s, nh, hd)
+             * p["d_skip"][None, None, :, None]).reshape(b, s, di).astype(y.dtype)
+    y = constrain(y, "batch", "seq", "d_inner")
+    y = rms_norm(y.astype(dtype_of(cfg)), p["norm"]) * jax.nn.silu(z)
+    return dense(y, p["out_proj"], quantize=quant), new_conv_state, \
+        new_ssd_state
+
+
+# --------------------------------------------------------------------------- #
+# Full attention-free model (mamba2-130m)
+# --------------------------------------------------------------------------- #
+
+def init_params(cfg, key) -> Dict:
+    dtype = dtype_of(cfg)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.layers)
+
+    def one(k):
+        kk = jax.random.split(k)
+        return {
+            "ln": jnp.ones((cfg.d_model,), dtype),
+            "ssm": init_ssm_params(kk[0], cfg, dtype),
+        }
+
+    return {
+        "embed": {"tokens": embed_init(k_embed, cfg.vocab, cfg.d_model,
+                                       dtype)},
+        "blocks": jax.vmap(one)(layer_keys),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def forward_train(cfg, params, batch) -> jnp.ndarray:
+    x = params["embed"]["tokens"][batch["tokens"]]
+
+    def body(carry, layer_p):
+        layer_p = constrain_layer_params(layer_p, cfg)
+        h = rms_norm(carry, layer_p["ln"])
+        y, _, _ = ssm_block(layer_p["ssm"], cfg, h)
+        return carry + y, None
+
+    groups = best_grouping(cfg.layers) if cfg.remat != "none" else 1
+    if groups > 1:
+        grouped = jax.tree.map(
+            lambda a: a.reshape(groups, cfg.layers // groups, *a.shape[1:]),
+            params["blocks"],
+        )
+
+        inner = maybe_remat(body, cfg)
+
+        def group_body(carry, gp):
+            y, _ = jax.lax.scan(inner, carry, gp)
+            return y, None
+
+        x, _ = jax.lax.scan(maybe_remat(group_body, cfg), x, grouped)
+    else:
+        x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["blocks"])
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["embed"]["tokens"].T
+    return constrain(logits, "batch", None, "vocab")
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> SSMCache:
+    del max_seq  # O(1) state — the whole point of the SSM family
+    di, nh, n, hd = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((cfg.layers, batch, conv_dim(cfg),
+                        cfg.conv_kernel - 1), dtype_of(cfg)),
+        state=jnp.zeros((cfg.layers, batch, nh, n, hd), jnp.float32),
+    )
+
+
+def forward_prefill(cfg, params, batch, cache: SSMCache):
+    """Prefill is a full forward that also extracts terminal states."""
+    x = params["embed"]["tokens"][batch["tokens"]]
+
+    def body(carry, xs):
+        layer_p, conv0, state0 = xs
+        h = rms_norm(carry, layer_p["ln"])
+        y, conv_st, ssd_st = ssm_block(layer_p["ssm"], cfg, h,
+                                       return_state=True)
+        conv_st = conv_st if conv_st is not None else conv0
+        return carry + y, (conv_st, ssd_st)
+
+    x, (convs, states) = jax.lax.scan(
+        body, x, (params["blocks"], cache.conv, cache.state)
+    )
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, -1:, :] @ params["embed"]["tokens"].T
+    return logits, SSMCache(convs, states)
+
+
+def forward_decode(cfg, params, token, cache: SSMCache, pos):
+    x = params["embed"]["tokens"][token][:, None, :]
+
+    def body(carry, xs):
+        layer_p, conv0, state0 = xs
+        h = rms_norm(carry, layer_p["ln"])
+        y, conv_st, ssd_st = ssm_block(
+            layer_p["ssm"], cfg, h, conv_state=conv0, ssd_state=state0,
+            decode=True,
+        )
+        return carry + y, (conv_st, ssd_st)
+
+    x, (convs, states) = jax.lax.scan(
+        body, x, (params["blocks"], cache.conv, cache.state)
+    )
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["embed"]["tokens"].T
+    return logits, SSMCache(convs, states)

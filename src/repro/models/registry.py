@@ -1,0 +1,141 @@
+"""Model registry: one functional API for every architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.models import hybrid, mamba2, transformer
+from repro.models.common import cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    """Functional model bundle for one config."""
+
+    cfg: Any
+    init: Callable                 # (key) -> params
+    train_logits: Callable         # (params, batch) -> logits
+    loss: Callable                 # (params, batch) -> scalar
+    init_cache: Callable           # (batch, max_seq) -> cache
+    prefill: Callable              # (params, batch, cache) -> (logits, cache)
+    decode: Optional[Callable]     # (params, token, cache, pos) -> (logits, cache)
+
+
+def _transformer_api(cfg) -> ModelAPI:
+    def loss(params, batch):
+        logits = transformer.forward_train(cfg, params, batch)
+        targets = batch["targets"]
+        if cfg.frontend == "vision_patches":
+            # patch positions carry no next-token target
+            logits = logits[:, cfg.num_patches:, :]
+        return cross_entropy(logits, targets)
+
+    decode = None
+    if cfg.is_decoder:
+        decode = lambda params, token, cache, pos: transformer.forward_decode(
+            cfg, params, token, cache, pos
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        train_logits=lambda params, batch: transformer.forward_train(
+            cfg, params, batch
+        ),
+        loss=loss,
+        init_cache=lambda batch, max_seq: transformer.init_cache(
+            cfg, batch, max_seq
+        ),
+        prefill=lambda params, batch, cache: transformer.forward_prefill(
+            cfg, params, batch, cache
+        ),
+        decode=decode,
+    )
+
+
+def _mamba_api(cfg) -> ModelAPI:
+    def loss(params, batch):
+        logits = mamba2.forward_train(cfg, params, batch)
+        return cross_entropy(logits, batch["targets"])
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: mamba2.init_params(cfg, key),
+        train_logits=lambda params, batch: mamba2.forward_train(
+            cfg, params, batch
+        ),
+        loss=loss,
+        init_cache=lambda batch, max_seq: mamba2.init_cache(
+            cfg, batch, max_seq
+        ),
+        prefill=lambda params, batch, cache: mamba2.forward_prefill(
+            cfg, params, batch, cache
+        ),
+        decode=lambda params, token, cache, pos: mamba2.forward_decode(
+            cfg, params, token, cache, pos
+        ),
+    )
+
+
+def _hybrid_api(cfg) -> ModelAPI:
+    def loss(params, batch):
+        logits = hybrid.forward_train(cfg, params, batch)
+        return cross_entropy(logits, batch["targets"])
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: hybrid.init_params(cfg, key),
+        train_logits=lambda params, batch: hybrid.forward_train(
+            cfg, params, batch
+        ),
+        loss=loss,
+        init_cache=lambda batch, max_seq: hybrid.init_cache(
+            cfg, batch, max_seq
+        ),
+        prefill=lambda params, batch, cache: hybrid.forward_prefill(
+            cfg, params, batch, cache
+        ),
+        decode=lambda params, token, cache, pos: hybrid.forward_decode(
+            cfg, params, token, cache, pos
+        ),
+    )
+
+
+def build_model(cfg) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "encoder", "vlm"):
+        return _transformer_api(cfg)
+    if cfg.family == "ssm":
+        return _mamba_api(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_api(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def make_batch_spec(cfg, shape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    For train: the full (tokens, targets) pair; encoder gets frames,
+    VLM gets (tokens, patch_embeds, targets).
+    """
+    import jax
+
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "targets": sds((b, s), jnp.int32),
+        }
+    if cfg.frontend == "vision_patches":
+        text = s - cfg.num_patches
+        return {
+            "tokens": sds((b, text), jnp.int32),
+            "patch_embeds": sds((b, cfg.num_patches, cfg.d_model),
+                                jnp.dtype(cfg.dtype)),
+            "targets": sds((b, text), jnp.int32),
+        }
+    return {
+        "tokens": sds((b, s), jnp.int32),
+        "targets": sds((b, s), jnp.int32),
+    }

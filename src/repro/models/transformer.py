@@ -1,0 +1,219 @@
+"""Decoder/encoder transformer with scan-over-layers (dense, MoE, VLM,
+encoder families).
+
+Layer parameters are stacked on a leading [L] axis and consumed with
+``jax.lax.scan`` so an 80-layer model traces exactly one block — mandatory
+for compiling the big dry-run cells and standard practice at scale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, constrain_layer_params
+from repro.models import moe as moe_mod
+from repro.models.attention import (
+    KVCache,
+    attention,
+    init_attn_params,
+    init_kv_cache,
+)
+from repro.models.common import (
+    best_grouping,
+    dense,
+    dense_init,
+    dtype_of,
+    embed_init,
+    maybe_remat,
+    rms_norm,
+)
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+def _init_block(cfg, key):
+    dtype = dtype_of(cfg)
+    k_attn, k_mlp = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attn_params(k_attn, cfg, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe_params(k_mlp, cfg, dtype)
+    else:
+        km = jax.random.split(k_mlp, 3)
+        p["mlp"] = {
+            "w1": dense_init(km[0], cfg.d_model, cfg.d_ff, dtype),
+            "w2": dense_init(km[1], cfg.d_ff, cfg.d_model, dtype),
+            "w3": dense_init(km[2], cfg.d_model, cfg.d_ff, dtype),
+        }
+    return p
+
+
+def init_params(cfg, key) -> Dict:
+    dtype = dtype_of(cfg)
+    k_embed, k_layers, k_head, k_front = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.layers)
+    params = {
+        "embed": {"tokens": embed_init(k_embed, cfg.vocab, cfg.d_model,
+                                       dtype)},
+        "blocks": jax.vmap(lambda k: _init_block(cfg, k))(layer_keys),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dtype)
+    if cfg.frontend == "audio_frames":
+        # stub for the conv feature extractor: frames arrive pre-extracted
+        params["frontend"] = {
+            "proj": dense_init(k_front, cfg.d_model, cfg.d_model, dtype)
+        }
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Blocks
+# --------------------------------------------------------------------------- #
+
+def _block(cfg, p, x, positions, cache=None, cache_pos=None):
+    h = rms_norm(x, p["ln1"])
+    attn_out, new_cache = attention(
+        p["attn"], cfg, h, positions=positions, cache=cache,
+        cache_pos=cache_pos,
+    )
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        x = x + moe_mod.moe_block(p["moe"], cfg, h)
+    else:
+        from repro.models.common import swiglu
+        x = x + swiglu(h, p["mlp"]["w1"], p["mlp"]["w2"], p["mlp"]["w3"],
+                       quantize=cfg.quantization == "bitnet")
+    x = constrain(x, "batch", "seq", "embed")
+    return x, new_cache
+
+
+def _scan_blocks(cfg, blocks, x, positions, caches=None, cache_pos=None):
+    """lax.scan over stacked layer params (and stacked KV caches)."""
+
+    if caches is None:
+        def body(carry, layer_p):
+            layer_p = constrain_layer_params(layer_p, cfg)
+            y, _ = _block(cfg, layer_p, carry, positions)
+            return y, None
+
+        groups = best_grouping(cfg.layers) if cfg.remat != "none" else 1
+        if groups > 1:
+            # sqrt-remat: outer scan over G checkpointed groups, plain inner
+            # scan over layers-per-group — G + L/G saved carries, not L
+            grouped = jax.tree.map(
+                lambda a: a.reshape(groups, cfg.layers // groups,
+                                    *a.shape[1:]), blocks,
+            )
+
+            inner = maybe_remat(body, cfg)   # per-layer remat inside too
+
+            def group_body(carry, group_params):
+                y, _ = jax.lax.scan(inner, carry, group_params)
+                return y, None
+
+            x, _ = jax.lax.scan(maybe_remat(group_body, cfg), x, grouped)
+        else:
+            x, _ = jax.lax.scan(maybe_remat(body, cfg), x, blocks)
+        return x, None
+
+    def body(carry, xs):
+        layer_p, kc, vc = xs
+        y, new_cache = _block(
+            cfg, layer_p, carry, positions, cache=KVCache(kc, vc),
+            cache_pos=cache_pos,
+        )
+        return y, (new_cache.k, new_cache.v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (blocks, caches.k, caches.v))
+    return x, KVCache(ks, vs)
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["ln_f"])
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["tokens"].T
+    else:
+        logits = dense(x, params["lm_head"])
+    # seq deliberately unsharded here: vocab takes the model axis
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _embed_inputs(cfg, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x [B, S, d], positions [B, S])."""
+    if cfg.frontend == "audio_frames":
+        # stub frontend: precomputed frame embeddings [B, S, d]
+        x = dense(batch["frames"], params["frontend"]["proj"])
+        b, s = x.shape[:2]
+        return x, jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    tokens = batch["tokens"]
+    x = params["embed"]["tokens"][tokens]
+    if cfg.frontend == "vision_patches":
+        # stub ViT: precomputed patch embeddings prepended to the text
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x],
+                            axis=1)
+    b, s = x.shape[:2]
+    return x, jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+
+# --------------------------------------------------------------------------- #
+# Public forward functions
+# --------------------------------------------------------------------------- #
+
+def forward_train(cfg, params, batch) -> jnp.ndarray:
+    """Returns logits [B, S_total, V]."""
+    x, positions = _embed_inputs(cfg, params, batch)
+    x = constrain(x, "batch", "seq", "embed")
+    x, _ = _scan_blocks(cfg, params["blocks"], x, positions)
+    return _logits(cfg, params, x)
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> KVCache:
+    dtype = dtype_of(cfg)
+    single = init_kv_cache(cfg, batch, max_seq, dtype)
+    stack = lambda a: jnp.broadcast_to(a[None], (cfg.layers,) + a.shape)
+    return KVCache(stack(single.k), stack(single.v))
+
+
+def forward_prefill(cfg, params, batch, cache: KVCache):
+    """Prompt pass: fills cache[:, :, :, :S), returns (last_logits, cache)."""
+    x, positions = _embed_inputs(cfg, params, batch)
+    x, new_cache = _scan_blocks_prefill(cfg, params["blocks"], x, positions,
+                                        cache)
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return logits, new_cache
+
+
+def _scan_blocks_prefill(cfg, blocks, x, positions, caches):
+    def body(carry, xs):
+        layer_p, kc, vc = xs
+        y, new_cache = _block(cfg, layer_p, carry, positions,
+                              cache=KVCache(kc, vc), cache_pos=None)
+        return y, (new_cache.k, new_cache.v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (blocks, caches.k, caches.v))
+    return x, KVCache(ks, vs)
+
+
+def forward_decode(cfg, params, token, cache: KVCache, pos):
+    """One decode step. token [B] int32, pos scalar or per-slot [B] int32.
+
+    Returns (logits [B, 1, V], new_cache).
+    """
+    x = params["embed"]["tokens"][token][:, None, :]     # [B, 1, d]
+    if jnp.ndim(pos) == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    x, new_cache = _scan_blocks(cfg, params["blocks"], x, positions,
+                                caches=cache, cache_pos=pos)
+    return _logits(cfg, params, x), new_cache

@@ -1,0 +1,138 @@
+"""Sub-byte weight packing — the storage format behind the R=4/R=2 modes.
+
+D-Legion feeds 2-bit (ternary) or 4-bit weights to its reconfigurable PEs.
+On TPU the equivalent win is bandwidth: weights live in HBM packed 4-per-byte
+(2-bit) or 2-per-byte (4-bit) and are unpacked *in VMEM* inside the Pallas
+bitlinear kernel.  Packing is along the **last axis**, which must be a
+multiple of the packing factor.
+
+Encodings (two's complement within the field):
+    2-bit: -1 -> 0b11, 0 -> 0b00, +1 -> 0b01   (value -2 is legal but unused)
+    4-bit: [-8, 7]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_2bit(w: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 values in [-2, 1] (ternary in practice) 4-per-byte.
+
+    Args:
+      w: int8 [..., K], K % 4 == 0, values in [-2, 1].
+    Returns:
+      uint8 [..., K // 4]; element j*4+i sits in byte j at bit 2*i.
+    """
+    if w.shape[-1] % 4:
+        raise ValueError(f"last axis {w.shape[-1]} not divisible by 4")
+    u = jnp.bitwise_and(w.astype(jnp.uint8), jnp.uint8(3))
+    u = u.reshape(*w.shape[:-1], w.shape[-1] // 4, 4)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    return jnp.sum(
+        jnp.left_shift(u, shifts), axis=-1, dtype=jnp.uint8
+    )
+
+
+def unpack_2bit(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_2bit` -> int8 [..., K*4]."""
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    vals = jnp.bitwise_and(
+        jnp.right_shift(packed[..., None], shifts), jnp.uint8(3)
+    ).astype(jnp.int8)
+    # sign-extend 2-bit two's complement: {0,1,2,3} -> {0,1,-2,-1}
+    vals = vals - jnp.left_shift(jnp.bitwise_and(vals, 2), 1)
+    return vals.reshape(*packed.shape[:-1], packed.shape[-1] * 4)
+
+
+def pack_4bit(w: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 values in [-8, 7] 2-per-byte (low nibble first)."""
+    if w.shape[-1] % 2:
+        raise ValueError(f"last axis {w.shape[-1]} not divisible by 2")
+    u = jnp.bitwise_and(w.astype(jnp.uint8), jnp.uint8(15))
+    u = u.reshape(*w.shape[:-1], w.shape[-1] // 2, 2)
+    return (u[..., 0] | jnp.left_shift(u[..., 1], jnp.uint8(4))).astype(
+        jnp.uint8
+    )
+
+
+def unpack_4bit(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_4bit` -> int8 [..., K*2]."""
+    shifts = jnp.array([0, 4], dtype=jnp.uint8)
+    vals = jnp.bitwise_and(
+        jnp.right_shift(packed[..., None], shifts), jnp.uint8(15)
+    ).astype(jnp.int8)
+    vals = vals - jnp.left_shift(jnp.bitwise_and(vals, 8), 1)
+    return vals.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# --------------------------------------------------------------------------- #
+# K-major packing — the TPU-native layout used by the bitlinear kernel.
+#
+# Packing a weight matrix [K, N] along K keeps N on the (128-wide) lane
+# dimension, so a VMEM block [bk//4, bn] unpacks into [bk, bn] with a cheap
+# sublane reshape instead of a lane-dimension shuffle.
+# --------------------------------------------------------------------------- #
+
+def pack_2bit_kmajor(w: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 [K, N] (values in [-2, 1]) -> uint8 [K // 4, N].
+
+    Byte (k', n) holds rows 4*k' .. 4*k'+3 of column n, row i at bit 2*i.
+    """
+    k, n = w.shape
+    if k % 4:
+        raise ValueError(f"K={k} not divisible by 4")
+    u = jnp.bitwise_and(w.astype(jnp.uint8), jnp.uint8(3)).reshape(k // 4, 4, n)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)[None, :, None]
+    return jnp.sum(jnp.left_shift(u, shifts), axis=1, dtype=jnp.uint8)
+
+
+def unpack_2bit_kmajor(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_2bit_kmajor` -> int8 [K, N]."""
+    kq, n = packed.shape
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)[None, :, None]
+    vals = jnp.bitwise_and(
+        jnp.right_shift(packed[:, None, :], shifts), jnp.uint8(3)
+    ).astype(jnp.int8)
+    vals = vals - jnp.left_shift(jnp.bitwise_and(vals, 2), 1)
+    return vals.reshape(kq * 4, n)
+
+
+def pack_4bit_kmajor(w: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 [K, N] (values in [-8, 7]) -> uint8 [K // 2, N]."""
+    k, n = w.shape
+    if k % 2:
+        raise ValueError(f"K={k} not divisible by 2")
+    u = jnp.bitwise_and(w.astype(jnp.uint8), jnp.uint8(15)).reshape(k // 2, 2, n)
+    return (u[:, 0, :] | jnp.left_shift(u[:, 1, :], jnp.uint8(4))).astype(
+        jnp.uint8
+    )
+
+
+def unpack_4bit_kmajor(packed: jnp.ndarray) -> jnp.ndarray:
+    kq, n = packed.shape
+    shifts = jnp.array([0, 4], dtype=jnp.uint8)[None, :, None]
+    vals = jnp.bitwise_and(
+        jnp.right_shift(packed[:, None, :], shifts), jnp.uint8(15)
+    ).astype(jnp.int8)
+    vals = vals - jnp.left_shift(jnp.bitwise_and(vals, 8), 1)
+    return vals.reshape(kq * 2, n)
+
+
+def pack(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits == 2:
+        return pack_2bit(w)
+    if bits == 4:
+        return pack_4bit(w)
+    if bits == 8:
+        return w.astype(jnp.int8)
+    raise ValueError(f"bits={bits}")
+
+
+def unpack(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits == 2:
+        return unpack_2bit(packed)
+    if bits == 4:
+        return unpack_4bit(packed)
+    if bits == 8:
+        return packed.astype(jnp.int8)
+    raise ValueError(f"bits={bits}")

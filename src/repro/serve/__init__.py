@@ -1,0 +1,2 @@
+"""Serving substrate: continuous-batching engine + cache planning."""
+from repro.serve.engine import Request, ServeEngine

@@ -1,0 +1,171 @@
+"""Serving engine: prefill/decode steps + continuous-batching scheduler.
+
+The engine runs a fixed number of *slots* (the compiled batch dimension);
+requests stream through slots as they finish (continuous batching).  Decode
+steps take per-slot positions, so slots never run in lockstep.
+
+Per-family notes: dense/moe/vlm use the KV cache; ssm/hybrid carry O(1)
+recurrent state (their ``pos`` only drives RoPE in the hybrid's shared
+attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [len] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    pos: int = 0                       # next write position in the cache
+
+
+def prepare_params(params, *, ternary: bool = True):
+    """Offline weight transform for serving: apply the BitNet ternary
+    quantization ONCE (quantize -> dequantize), so the serve graph runs
+    plain matmuls over already-quantized values — no per-step quant math
+    (the packed-int8 variant goes further via kernels/bitlinear)."""
+    if not ternary:
+        return params
+    from repro.quant.bitnet import quantize_weight_ternary
+
+    def q(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if leaf.ndim >= 2 and (name.startswith("in_proj") or name in (
+            "wq", "wk", "wv", "wo", "w1", "w2", "w3", "out_proj",
+        )):
+            qv, gamma = quantize_weight_ternary(leaf)
+            return (qv.astype(leaf.dtype) * gamma.astype(leaf.dtype))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+class ServeEngine:
+    """Continuous-batching engine over a registry ModelAPI."""
+
+    def __init__(self, api, params, *, max_slots: int = 4,
+                 max_seq: int = 512, greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0):
+        if api.decode is None:
+            raise ValueError(f"{api.cfg.name} is encoder-only; no decode")
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.cache = api.init_cache(max_slots, max_seq)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._decode = jax.jit(
+            lambda params, tok, cache, pos: api.decode(params, tok, cache,
+                                                       pos)
+        )
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(uid=len(self.queue) + len(self.finished),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------ #
+    def _admit(self):
+        """Fill free slots from the queue; prefill each admitted request."""
+        for i, slot in enumerate(self.slots):
+            if slot.request is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            # single-request prefill into this slot's cache lane
+            single_cache = self.api.init_cache(1, self.max_seq)
+            logits, single_cache = self.api.prefill(
+                self.params,
+                {"tokens": jnp.asarray(req.prompt[None, :])},
+                single_cache,
+            )
+            self.cache = _write_slot(self.cache, single_cache, i)
+            tok = self._sample(logits[:, -1])
+            req.output.append(int(tok[0]))
+            slot.request = req
+            slot.pos = plen
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def _active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    # ------------------------------------------------------------------ #
+    def step(self):
+        """One batched decode step across all active slots."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return False
+        tokens = np.zeros((self.max_slots,), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            slot = self.slots[i]
+            tokens[i] = slot.request.output[-1]
+            pos[i] = slot.pos
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos)
+        )
+        next_tok = np.asarray(self._sample(logits[:, -1]))
+        for i in active:
+            slot = self.slots[i]
+            req = slot.request
+            req.output.append(int(next_tok[i]))
+            slot.pos += 1
+            hit_eos = req.eos_id is not None and next_tok[i] == req.eos_id
+            if (len(req.output) >= req.max_new_tokens or hit_eos
+                    or slot.pos >= self.max_seq - 1):
+                req.done = True
+                self.finished.append(req)
+                slot.request = None
+        return True
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or self._active()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+
+def _write_slot(cache, single_cache, slot: int):
+    """Copy a 1-lane prefilled cache into lane ``slot`` of the engine cache.
+
+    Works for KVCache / SSMCache / HybridCache: every leaf's batch axis is
+    the second dim for stacked [L, B, ...] leaves.
+    """
+    def write(full, single):
+        return jax.lax.dynamic_update_slice_in_dim(full, single, slot,
+                                                   axis=1)
+    return jax.tree.map(write, cache, single_cache)

@@ -1,0 +1,41 @@
+"""KV-cache utilities: size accounting + sliding-window (ring) option.
+
+The cache layouts themselves live with their models (models.attention.KVCache,
+models.mamba2.SSMCache, models.hybrid.HybridCache); this module provides the
+capacity planning the serving engine and the dry-run memory analysis use.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheBudget:
+    bytes_per_token: int     # across all layers
+    total_bytes: int
+    fits_hbm: bool
+
+
+def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
+    """Dense/moe/vlm: 2 * kv_heads * head_dim * layers * dtype."""
+    if cfg.family in ("ssm",):
+        return 0   # O(1) state
+    layers = cfg.layers
+    if cfg.family == "hybrid":
+        import math
+        layers = math.ceil(cfg.layers / cfg.attn_every)  # shared-attn apps
+    return 2 * cfg.kv_heads * cfg.head_dim_ * layers * dtype_bytes
+
+
+def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
+         chips: int, dtype_bytes: int = 2) -> CacheBudget:
+    bpt = kv_bytes_per_token(cfg, dtype_bytes)
+    total = bpt * batch * max_seq
+    if cfg.family in ("ssm", "hybrid"):
+        di, n = cfg.d_inner, cfg.ssm_state
+        total += (di * n // max(cfg.ssm_head_dim, 1) * cfg.ssm_head_dim
+                  * 4 * batch * cfg.layers)
+    return CacheBudget(
+        bytes_per_token=bpt, total_bytes=total,
+        fits_hbm=total <= hbm_bytes_per_chip * chips,
+    )

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, step builders, checkpoint, fault tolerance."""
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import TrainingRunner
+from repro.train.optimizer import AdamW, cosine_schedule, global_norm
+from repro.train.train_loop import TrainState, build_train_step, init_train_state

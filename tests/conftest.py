@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests see ONE device (the dry-run alone forces 512 in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

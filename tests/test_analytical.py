@@ -1,0 +1,78 @@
+"""Analytical model (paper eqs. 1-3, peak TOPS, CRI, scaling bound)."""
+import math
+
+import pytest
+
+from repro.core import adip_64, dip_64, dlegion, tpuv4i, ws_64
+from repro.core.analytical import (
+    cri,
+    hbm_legions_supported,
+    tfu_cycles,
+    tiles,
+    unit_input_bandwidth,
+    unit_latency_cycles,
+)
+from repro.core.workloads import corner_case_workloads
+
+
+def test_eq1_tiles():
+    t = tiles(2048, 2560, 128, d=16, c=8, r=4)
+    assert (t.mt, t.kt, t.nt) == (128, 20, 2)
+    t = tiles(1, 1, 1, d=16, c=8, r=1)
+    assert (t.mt, t.kt, t.nt) == (1, 1, 1)
+
+
+def test_eq2_legion_latency_exact():
+    # Latency = KT*NT*(D*(MT+1)+P)+D for the ADiP dataflow
+    cfg = dlegion()
+    lat = unit_latency_cycles(cfg, 2048, 2560, 128, 2)
+    assert lat == 20 * 2 * (16 * 129 + 4) + 16
+
+
+def test_eq3_tfu():
+    assert tfu_cycles(dlegion()) == 16
+    assert tfu_cycles(adip_64()) == 64
+
+
+def test_peak_tops_paper_numbers():
+    assert dlegion().peak_tops(4) == pytest.approx(135.68)
+    assert dlegion().peak_tops(1) == pytest.approx(33.92)
+    assert dlegion(64).peak_tops(4) == pytest.approx(1085.44)
+    assert dlegion(32).peak_tops(4) == pytest.approx(542.72)
+
+
+def test_adip_limited_by_head_dim():
+    """Paper SS V-A: single 64x64 ADiP gets only 2x (not 4x) on N=128."""
+    adip = adip_64()
+    lat_dense = unit_latency_cycles(adip, 2048, 2560, 128, 8)
+    lat_quant = unit_latency_cycles(adip, 2048, 2560, 128, 2)
+    assert 1.9 < lat_dense / lat_quant < 2.1
+
+
+def test_latency_monotonic_in_dims():
+    cfg = dlegion()
+    base = unit_latency_cycles(cfg, 512, 512, 512, 8)
+    for m, k, n in [(1024, 512, 512), (512, 1024, 512), (512, 512, 1024)]:
+        assert unit_latency_cycles(cfg, m, k, n, 8) >= base
+
+
+def test_cri_ranking_matches_paper():
+    wl = corner_case_workloads()
+    from benchmarks.dse import LEGION_CONFIGS, _adip_cfg
+    scores = {
+        name: cri(_adip_cfg(c, d, name), wl)
+        for name, c, d in LEGION_CONFIGS
+    }
+    assert scores["8x16x16"] > scores["2x64x64"]
+    assert scores["8x16x16"] > scores["4x32x32"]
+
+
+def test_input_bandwidth_same_across_legion_configs():
+    from benchmarks.dse import LEGION_CONFIGS, _adip_cfg
+    bws = {unit_input_bandwidth(_adip_cfg(c, d, n))
+           for n, c, d in LEGION_CONFIGS}
+    assert bws == {128}
+
+
+def test_hbm_scaling_bound():
+    assert hbm_legions_supported() == 64

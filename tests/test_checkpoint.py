@@ -1,0 +1,93 @@
+"""Checkpointing + fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import synthetic_batch
+from repro.models import build_model
+from repro.train import (
+    AdamW,
+    Checkpointer,
+    TrainingRunner,
+    build_train_step,
+    init_train_state,
+)
+
+
+def test_roundtrip_exotic_dtypes_and_namedtuples(tmp_path):
+    from repro.train.train_loop import TrainState
+    from repro.train.optimizer import AdamWState
+    state = TrainState(
+        params={"w": jnp.ones((4, 4), jnp.bfloat16)},
+        opt=AdamWState(step=jnp.int32(7),
+                       mu={"w": jnp.full((4, 4), 0.5)},
+                       nu={"w": jnp.full((4, 4), 0.25)}),
+        ef=None,
+    )
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, state, blocking=True)
+    step, restored = ck.restore(example=state)
+    assert step == 7
+    assert isinstance(restored, TrainState) and restored.ef is None
+    assert restored.params["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored.params["w"], np.float32),
+        np.asarray(state.params["w"], np.float32),
+    )
+    assert int(restored.opt.step) == 7
+
+
+def test_latest_pointer_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.array([s])}, blocking=True)
+    assert ck.latest_step() == 4
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2
+    _, t = ck.restore()
+    assert int(t["x"][0]) == 4
+
+
+def test_crash_restart_resumes_deterministically(tmp_path):
+    cfg = reduced(get_config("qwen3-1.7b"))
+    api = build_model(cfg)
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    stepfn = jax.jit(build_train_step(api, opt))
+    batch_fn = lambda s: {k: jnp.asarray(v) for k, v in
+                          synthetic_batch(cfg, batch=2, seq=32,
+                                          step=s).items()}
+
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    runner = TrainingRunner(stepfn, batch_fn, state,
+                            Checkpointer(str(tmp_path)), ckpt_every=3)
+    with pytest.raises(RuntimeError):
+        runner.run(10, fail_at=7, install_signal_handler=False)
+
+    state2 = init_train_state(api, opt, jax.random.PRNGKey(99))
+    runner2 = TrainingRunner(stepfn, batch_fn, state2,
+                             Checkpointer(str(tmp_path)), ckpt_every=3)
+    m = runner2.run(10, install_signal_handler=False)
+    assert runner2.start_step == 6
+
+    state3 = init_train_state(api, opt, jax.random.PRNGKey(0))
+    for s in range(10):
+        state3, m3 = stepfn(state3, batch_fn(s))
+    assert float(m["loss"]) == pytest.approx(float(m3["loss"]), rel=1e-5)
+
+
+def test_elastic_restore_with_device_put(tmp_path):
+    """Restore reshards host arrays onto (here: single-device) shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree, blocking=True)
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    _, restored = ck.restore(shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))

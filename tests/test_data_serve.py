@@ -1,0 +1,125 @@
+"""Data pipeline + serving engine."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import (
+    Prefetcher,
+    TokenShardReader,
+    synthetic_batch,
+    write_token_shard,
+)
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+from repro.serve.engine import prepare_params
+from repro.serve.kv_cache import kv_bytes_per_token, plan
+
+
+def test_synthetic_batch_deterministic():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    b1 = synthetic_batch(cfg, batch=4, seq=32, step=7)
+    b2 = synthetic_batch(cfg, batch=4, seq=32, step=7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = synthetic_batch(cfg, batch=4, seq=32, step=8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # next-token objective: targets are tokens shifted by one
+    full = synthetic_batch(cfg, batch=4, seq=32, step=7)
+    assert (full["targets"][:, :-1] == full["tokens"][:, 1:]).all()
+
+
+def test_token_shard_reader_host_split(tmp_path):
+    path = str(tmp_path / "shard.bin")
+    rng = np.random.default_rng(0)
+    write_token_shard(path, rng.integers(0, 1000, 100_000))
+    reader = TokenShardReader(path, vocab=1000)
+    full = reader.batch(batch=8, seq=64, step=3)
+    h0 = reader.batch(batch=8, seq=64, step=3, host=0, num_hosts=2)
+    h1 = reader.batch(batch=8, seq=64, step=3, host=1, num_hosts=2)
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), full["tokens"]
+    )
+    assert (full["targets"][:, :-1] == full["tokens"][:, 1:]).all()
+
+
+def test_prefetcher_order():
+    pf = Prefetcher(lambda s: {"step": np.array([s])}, depth=2)
+    steps = [s for s, _ in pf(5, 12)]
+    assert steps == list(range(5, 12))
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mamba2-130m", "zamba2-7b"])
+def test_serve_engine_continuous_batching(arch):
+    cfg = reduced(get_config(arch))
+    api = build_model(cfg)
+    params = prepare_params(api.init(jax.random.PRNGKey(0)))
+    eng = ServeEngine(api, params, max_slots=3, max_seq=96)
+    reqs = [eng.submit(np.arange(1, 4 + i), max_new_tokens=4 + i % 3)
+            for i in range(5)]
+    done = eng.run_until_done()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.output) == r.max_new_tokens
+        assert all(0 <= t < cfg.vocab for t in r.output)
+
+
+def test_serve_greedy_deterministic():
+    cfg = reduced(get_config("smollm-360m"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(api, params, max_slots=2, max_seq=64)
+        eng.submit(np.array([5, 6, 7]), max_new_tokens=6)
+        done = eng.run_until_done()
+        outs.append(done[0].output)
+    assert outs[0] == outs[1]
+
+
+def test_serve_engine_matches_manual_decode():
+    """Engine output == hand-rolled prefill+decode loop (greedy)."""
+    cfg = reduced(get_config("qwen3-1.7b")).replace(dtype="float32",
+                                                    quantization="none")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(3))
+    prompt = np.array([3, 1, 4, 1, 5])
+    eng = ServeEngine(api, params, max_slots=2, max_seq=64)
+    eng.submit(prompt, max_new_tokens=5)
+    out_engine = eng.run_until_done()[0].output
+
+    cache = api.init_cache(1, 64)
+    lg, cache = api.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                            cache)
+    toks = [int(jnp.argmax(lg[0, -1]))]
+    pos = len(prompt)
+    for _ in range(4):
+        lg, cache = api.decode(params, jnp.array([toks[-1]]), cache,
+                               jnp.int32(pos))
+        toks.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    assert out_engine == toks
+
+
+def test_prepare_params_quantizes_matrices():
+    cfg = reduced(get_config("smollm-360m"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    qp = prepare_params(params)
+    w = np.asarray(qp["blocks"]["attn"]["wq"], np.float32)
+    vals = np.unique(np.round(w / (np.abs(w)[w != 0].min() + 1e-12)))
+    # ternary x scale: at most 3 distinct magnitudes per layer slice
+    per_layer = np.asarray(qp["blocks"]["attn"]["wq"][0], np.float32)
+    assert len(np.unique(per_layer)) <= 3
+
+
+def test_kv_cache_plan():
+    cfg = get_config("granite-20b")
+    bpt = kv_bytes_per_token(cfg)
+    assert bpt == 2 * 1 * 128 * 52 * 2
+    budget = plan(cfg, batch=128, max_seq=32768,
+                  hbm_bytes_per_chip=16e9, chips=256)
+    assert budget.fits_hbm
+    tight = plan(cfg, batch=128, max_seq=32768,
+                 hbm_bytes_per_chip=16e9, chips=1)
+    assert not tight.fits_hbm

@@ -1,0 +1,89 @@
+"""End-to-end dry-run machinery on a small host mesh (subprocess: the main
+test process must keep seeing ONE device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, sys.argv[1] + "/src")
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, reduced, shape_by_name
+    from repro.configs.base import ShapeConfig
+    from repro.distributed.sharding import make_rules, param_shardings, use_rules
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model, make_batch_spec
+    from repro.train.optimizer import AdamW
+    from repro.train.train_loop import TrainState, build_train_step
+
+    results = {}
+    mesh = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
+    for arch in ["qwen3-1.7b", "mamba2-130m", "granite-moe-1b-a400m"]:
+        cfg = reduced(get_config(arch)).replace(remat="block")
+        shape = ShapeConfig("tiny_train", 128, 8, "train")
+        api = build_model(cfg)
+        opt = AdamW(lr=1e-3)
+        rules = make_rules(cfg, mesh, shape)
+        step = build_train_step(api, opt)
+        def step_with_rules(state, batch, step=step, rules=rules):
+            with use_rules(rules):
+                return step(state, batch)
+        state_shapes = jax.eval_shape(
+            lambda k: TrainState(params=api.init(k),
+                                 opt=opt.init(api.init(k)), ef=None),
+            jax.random.PRNGKey(0))
+        p_sh = param_shardings(cfg, mesh, state_shapes.params, fsdp=True)
+        opt_sh = type(state_shapes.opt)(
+            step=NamedSharding(mesh, P()),
+            mu=param_shardings(cfg, mesh, state_shapes.opt.mu, fsdp=True),
+            nu=param_shardings(cfg, mesh, state_shapes.opt.nu, fsdp=True))
+        state_sh = TrainState(params=p_sh, opt=opt_sh, ef=None)
+        batch_spec = make_batch_spec(cfg, shape)
+        batch_sh = {k: NamedSharding(mesh, P(("pod", "data"),
+                                             *([None]*(len(v.shape)-1))))
+                    for k, v in batch_spec.items()}
+        metrics_sh = {k: NamedSharding(mesh, P()) for k in
+                      ("loss", "grad_norm", "step")}
+        lowered = jax.jit(step_with_rules,
+                          in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, metrics_sh),
+                          donate_argnums=(0,)).lower(state_shapes, batch_spec)
+        compiled = lowered.compile()
+        cost = hlo_cost.loop_aware_cost(compiled.as_text())
+        mem = compiled.memory_analysis()
+        results[arch] = {
+            "flops": cost["flops"],
+            "coll": sum(cost["collectives"].values()),
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+        }
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_multipod_dryrun_small_mesh(tmp_path):
+    script = tmp_path / "dryrun_small.py"
+    script.write_text(SCRIPT)
+    proc = subprocess.run(
+        [sys.executable, str(script), os.path.abspath(ROOT)],
+        capture_output=True, text=True, timeout=560,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    results = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert set(results) == {"qwen3-1.7b", "mamba2-130m",
+                            "granite-moe-1b-a400m"}
+    for arch, r in results.items():
+        assert r["flops"] > 0, arch
+        assert r["coll"] > 0, f"{arch}: multi-pod step must communicate"
+        assert r["temp_gb"] < 8, f"{arch}: tiny config must be tiny"

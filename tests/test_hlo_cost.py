@@ -1,0 +1,95 @@
+"""Loop-aware HLO cost analysis (the dry-run's measurement layer)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import loop_aware_cost, parse_module, \
+    computation_multipliers
+
+
+def _compiled_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_scan_flops_scale_with_trip_count():
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    base = 2 * 128 ** 3
+
+    def make(n):
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=n)
+            return y.sum()
+        return f
+
+    for n in (1, 4, 16):
+        c = loop_aware_cost(_compiled_text(make(n), xs, ws))
+        assert c["flops"] == pytest.approx(base * n, rel=0.01)
+
+
+def test_nested_scan_multipliers():
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def g(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            y, _ = jax.lax.scan(inner, c, None, length=5)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+
+    c = loop_aware_cost(_compiled_text(g, xs, ws))
+    assert c["flops"] == pytest.approx(2 * 128 ** 3 * 15, rel=0.01)
+
+
+def test_bytes_scale_with_trip_count():
+    xs = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def make(n):
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=n)
+            return y.sum()
+        return f
+
+    b4 = loop_aware_cost(_compiled_text(make(4), xs, ws))["bytes"]
+    b16 = loop_aware_cost(_compiled_text(make(16), xs, ws))["bytes"]
+    assert 3.0 < b16 / b4 < 4.5   # ~4x, modulo loop-invariant setup
+
+
+def test_collective_parse_sharded_module():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs multiple host devices")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((jax.device_count(),), ("model",))
+
+    def f(x, w):
+        y = x @ w
+        return jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P(None, None))
+        ).sum()
+
+    lowered = jax.jit(
+        f,
+        in_shardings=(NamedSharding(mesh, P(None, None)),
+                      NamedSharding(mesh, P(None, "model"))),
+    ).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    c = loop_aware_cost(lowered.compile().as_text())
+    assert sum(c["collectives"].values()) > 0
+
+
+def test_parse_module_finds_entry():
+    xs = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    txt = _compiled_text(lambda x: (x @ x).sum(), xs)
+    comps = parse_module(txt)
+    assert any(c.is_entry for c in comps.values())
+    mult = computation_multipliers(comps)
+    assert all(m >= 0 for m in mult.values())

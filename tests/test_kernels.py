@@ -1,0 +1,177 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import (
+    csr_block_schedule,
+    prune_block_structured,
+    ztb_from_weight,
+)
+from repro.kernels.bitlinear.kernel import bitlinear_matmul
+from repro.kernels.bitlinear.ref import bitlinear_matmul_ref
+from repro.kernels.block_sparse.ops import ztb_matmul
+from repro.kernels.block_sparse.ref import block_sparse_matmul_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd.ops import ssd
+from repro.quant.packing import pack_2bit_kmajor, pack_4bit_kmajor
+
+
+# --------------------------------------------------------------------------- #
+# bitlinear
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 512, 256),
+                                   (128, 1024, 384)])
+@pytest.mark.parametrize("bits", [2, 4])
+def test_bitlinear_sweep(rng, m, k, n, bits):
+    w = rng.integers(-1 if bits == 2 else -8, 2 if bits == 2 else 8,
+                     size=(k, n)).astype(np.int8)
+    x = rng.integers(-128, 128, size=(m, k)).astype(np.int8)
+    pack = pack_2bit_kmajor if bits == 2 else pack_4bit_kmajor
+    wp = pack(jnp.array(w))
+    expect = x.astype(np.int32) @ w.astype(np.int32)
+    out_ref = bitlinear_matmul_ref(jnp.array(x), wp, bits=bits)
+    out_k = bitlinear_matmul(jnp.array(x), wp, bits=bits, bm=128, bn=128,
+                             bk=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_ref), expect)
+    np.testing.assert_array_equal(np.asarray(out_k), expect)
+
+
+def test_bitlinear_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        bitlinear_matmul(jnp.zeros((100, 256), jnp.int8),
+                         jnp.zeros((64, 128), jnp.uint8), interpret=True)
+
+
+# --------------------------------------------------------------------------- #
+# block-sparse (ZTB)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.3, 0.6, 0.95])
+def test_block_sparse_sweep(rng, sparsity):
+    m, k, n, b = 128, 512, 384, 128
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w = prune_block_structured(w, block_k=b, block_n=b, sparsity=sparsity)
+    book = ztb_from_weight(w, block_k=b, block_n=b, window=4)
+    nz = book.tile_nonzero.reshape(-1, n // b)[: k // b]
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    out = ztb_matmul(jnp.array(x), jnp.array(w), np.asarray(nz),
+                     bm=128, bn=b, bk=b, backend="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), x @ w, rtol=1e-4, atol=1e-3)
+
+
+def test_csr_schedule_invariants(rng):
+    nz = rng.random((8, 6)) > 0.5
+    indices, counts = csr_block_schedule(nz)
+    for j in range(6):
+        col = np.nonzero(nz[:, j])[0]
+        assert counts[j] == len(col)
+        assert (indices[j, :counts[j]] == col).all()
+        assert (indices[j] < 8).all() and (indices[j] >= 0).all()
+
+
+def test_ztb_stats():
+    w = np.zeros((256, 256), np.float32)
+    w[:128, :128] = 1.0
+    book = ztb_from_weight(w, block_k=64, block_n=64, window=2)
+    stats = book.stats()
+    assert stats.zero_tile_fraction == pytest.approx(0.75)
+    assert 0 < stats.fully_sparse_fraction < 1
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(rng, h, hkv, causal):
+    b, s, d = 2, 256, 32
+    q = jnp.array(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.array(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    out_k = flash_attention(q, k, v, causal=causal, backend="pallas",
+                            interpret=True)
+    out_r = flash_attention(q, k, v, causal=causal, backend="reference")
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    b, h, s, d = 1, 2, 128, 64
+    q = jnp.array(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    k = jnp.array(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    v = jnp.array(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    out_k = flash_attention(q, k, v, backend="pallas", interpret=True)
+    out_r = flash_attention(q, k, v, backend="reference")
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_flash_custom_vjp_grads(rng):
+    """models.attention._flash (XLA twin) — grads vs dense softmax."""
+    from repro.models.attention import _flash_ref
+    b, s, h, hkv, d = 1, 128, 4, 2, 16
+    q = jnp.array(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.array(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+
+    def dense(q, k, v):
+        kk = jnp.repeat(k, h // hkv, axis=2)
+        vv = jnp.repeat(v, h // hkv, axis=2)
+        sc = jnp.einsum("bshd,bthd->bhst", q, kk) / (d ** 0.5)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        return jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(sc, -1), vv)
+
+    f1 = lambda *a: (_flash_ref(*a, causal=True, bq=64, bk=32) ** 2).sum()
+    f2 = lambda *a: (dense(*a) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-3, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# SSD (Mamba-2)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("s,p,n,chunk", [(128, 32, 16, 32), (256, 64, 32, 64),
+                                         (64, 16, 64, 64)])
+def test_ssd_sweep(rng, s, p, n, chunk):
+    bh = 3
+    dt = rng.uniform(0.001, 0.1, size=(bh, s)).astype(np.float32)
+    a = -np.exp(rng.standard_normal((bh,))).astype(np.float32)
+    dta = jnp.array(dt * a[:, None])
+    x = rng.standard_normal((bh, s, p)).astype(np.float32)
+    dtx = jnp.array(x * dt[..., None])
+    b = jnp.array(rng.standard_normal((bh, s, n)).astype(np.float32))
+    c = jnp.array(rng.standard_normal((bh, s, n)).astype(np.float32))
+    y_naive = ssd(dta, dtx, b, c, backend="naive")
+    y_chunk = ssd(dta, dtx, b, c, backend="reference", chunk=chunk)
+    y_pallas = ssd(dta, dtx, b, c, backend="pallas", chunk=chunk,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_final_state_consistency(rng):
+    """Terminal state from chunked == naive (prefill -> decode handoff)."""
+    bh, s, p, n = 2, 128, 16, 8
+    dt = rng.uniform(0.001, 0.1, size=(bh, s)).astype(np.float32)
+    dta = jnp.array(dt * -0.5)
+    dtx = jnp.array(rng.standard_normal((bh, s, p)).astype(np.float32))
+    b = jnp.array(rng.standard_normal((bh, s, n)).astype(np.float32))
+    c = jnp.array(rng.standard_normal((bh, s, n)).astype(np.float32))
+    _, h1 = ssd(dta, dtx, b, c, backend="naive", return_state=True)
+    _, h2 = ssd(dta, dtx, b, c, backend="reference", chunk=32,
+                return_state=True)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,37 @@
+"""Packed-ternary serving path (paper's 2-bit weight format, hillclimb 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.packing import pack_2bit_kmajor
+
+
+def test_pack_unpack_tree_roundtrip():
+    from repro.launch.dryrun import _pack_tree, _unpack_tree
+    from jax.sharding import AbstractMesh, NamedSharding, PartitionSpec as P
+    mesh = jax.sharding.AbstractMesh((1, 1), ("data", "model"))
+    sh = NamedSharding(mesh, P(None, None))
+    shapes = {"blocks": {"mlp": {"w1": jax.ShapeDtypeStruct(
+        (2, 8, 16), jnp.bfloat16)}},
+        "ln_f": jax.ShapeDtypeStruct((16,), jnp.bfloat16)}
+    shard = {"blocks": {"mlp": {"w1": NamedSharding(
+        mesh, P(None, None, None))}}, "ln_f": sh}
+    pt, ps = _pack_tree(shapes, shard)
+    w1 = pt["blocks"]["mlp"]["w1"]
+    assert w1["packed"].shape == (2, 2, 16)
+    assert w1["packed"].dtype == jnp.uint8
+    assert pt["ln_f"].shape == (16,)          # 1-D stays bf16
+
+    # real values: ternary * scale survives the round trip exactly
+    rng = np.random.default_rng(0)
+    q = rng.integers(-1, 2, size=(2, 8, 16)).astype(np.int8)
+    packed = jax.vmap(pack_2bit_kmajor)(jnp.asarray(q))
+    tree = {"blocks": {"mlp": {"w1": {
+        "packed": packed, "scale": jnp.float32(0.37)}}},
+        "ln_f": jnp.ones((16,), jnp.bfloat16)}
+    out = _unpack_tree(tree)
+    np.testing.assert_allclose(
+        np.asarray(out["blocks"]["mlp"]["w1"], np.float32),
+        q.astype(np.float32) * np.float32(jnp.bfloat16(0.37)),
+        rtol=1e-2,
+    )

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dlegion, simulate
+from repro.core.analytical import unit_latency_cycles
+from repro.core.sparsity import (
+    ZTBStats,
+    csr_block_schedule,
+    prune_block_structured,
+    ztb_from_weight,
+)
+from repro.core.workloads import GEMMWorkload
+
+SETTINGS = dict(max_examples=30, deadline=None)
+dims = st.integers(1, 4096)
+
+
+@settings(**SETTINGS)
+@given(dims, dims, dims, st.sampled_from([2, 4, 8]))
+def test_latency_positive_and_monotone_in_m(m, k, n, bits):
+    cfg = dlegion()
+    lat = unit_latency_cycles(cfg, m, k, n, bits)
+    assert lat > 0
+    assert unit_latency_cycles(cfg, m + 16, k, n, bits) >= lat
+
+
+@settings(**SETTINGS)
+@given(dims, dims, dims)
+def test_quantized_never_slower_than_dense(m, k, n):
+    cfg = dlegion()
+    assert unit_latency_cycles(cfg, m, k, n, 2) <= \
+        unit_latency_cycles(cfg, m, k, n, 8)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(0, 100))
+def test_sim_report_internally_consistent(count, layers, seed):
+    w = GEMMWorkload(stage="qkv_proj", m=128, k=256, n=64, weight_bits=2,
+                     count=count, layers=layers, shared_input=True)
+    rep = simulate(dlegion(), [w])
+    assert rep.total_ops == w.ops
+    assert rep.total_cycles > 0
+    assert rep.total_mem_gb >= 0
+    # more layers -> proportionally more of everything
+    w2 = GEMMWorkload(stage="qkv_proj", m=128, k=256, n=64, weight_bits=2,
+                      count=count, layers=layers * 2, shared_input=True)
+    rep2 = simulate(dlegion(), [w2])
+    assert rep2.total_cycles == 2 * rep.total_cycles
+
+
+@settings(**SETTINGS)
+@given(st.floats(0.0, 0.9))
+def test_ztb_fraction_reduces_cycles_monotonically(frac):
+    w = GEMMWorkload(stage="qkv_proj", m=512, k=4096, n=512, weight_bits=2)
+    dense = simulate(dlegion(), [w])
+    sparse = simulate(dlegion(), [w],
+                      ztb=ZTBStats(frac, frac, 10, 80))
+    assert sparse.total_cycles <= dense.total_cycles
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
+def test_prune_then_book_hits_target_sparsity(seed, sparsity):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((256, 128)).astype(np.float32)
+    w = prune_block_structured(w, block_k=64, block_n=64, sparsity=sparsity)
+    book = ztb_from_weight(w, block_k=64, block_n=64, window=2)
+    stats = book.stats()
+    expected_zero = round(sparsity * 8) / 8
+    assert abs(stats.zero_tile_fraction - expected_zero) < 0.2
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1))
+def test_csr_schedule_covers_exactly_nonzeros(seed):
+    rng = np.random.default_rng(seed)
+    nz = rng.random((12, 7)) > 0.6
+    indices, counts = csr_block_schedule(nz)
+    assert counts.sum() == nz.sum()
+    for j in range(7):
+        sched = set(indices[j, :counts[j]].tolist())
+        assert sched == set(np.nonzero(nz[:, j])[0].tolist())
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_data_pipeline_pure_function_of_step(seed, step):
+    from repro.configs import get_config, reduced
+    from repro.data import synthetic_batch
+    cfg = reduced(get_config("smollm-360m"))
+    a = synthetic_batch(cfg, batch=2, seq=16, step=step, seed=seed)
+    b = synthetic_batch(cfg, batch=2, seq=16, step=step, seed=seed)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < cfg.vocab

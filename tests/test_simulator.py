@@ -1,0 +1,106 @@
+"""Cycle/traffic simulator reproduces the paper's evaluation (SS V)."""
+import pytest
+
+from repro.core import (
+    adip_64,
+    attention_workloads,
+    bitnet_1_58b,
+    bitnet_1_58b_kv,
+    compare,
+    dip_64,
+    dlegion,
+    simulate,
+    tpuv4i,
+    ws_64,
+)
+from repro.core.sparsity import ZTBStats
+from repro.core.workloads import total_ops
+
+
+@pytest.fixture(scope="module")
+def reports():
+    wl = attention_workloads(bitnet_1_58b())
+    return [simulate(c, wl) for c in
+            (ws_64(), dip_64(), adip_64(), dlegion())]
+
+
+def test_workload_sizes_near_paper():
+    # paper: ~4.02 / ~2.99 TOPs (ours: analytic MACs, ~4% under)
+    assert total_ops(attention_workloads(bitnet_1_58b())) / 1e12 == \
+        pytest.approx(4.02, rel=0.06)
+    assert total_ops(attention_workloads(bitnet_1_58b_kv())) / 1e12 == \
+        pytest.approx(2.99, rel=0.07)
+
+
+def test_fig7_latency_headlines(reports):
+    r_ws = compare(reports, "WS-64x64")["D-Legion-8L"]
+    r_dip = compare(reports, "DiP-64x64")["D-Legion-8L"]
+    r_adip = compare(reports, "ADiP-64x64")["D-Legion-8L"]
+    assert r_ws["latency_x[qkv_proj]"] == pytest.approx(16.87, rel=0.05)
+    assert r_dip["latency_x[qkv_proj]"] == pytest.approx(16.4, rel=0.05)
+    assert r_adip["latency_x[qkv_proj]"] == pytest.approx(8.2, rel=0.05)
+    assert r_ws["latency_x"] == pytest.approx(9.26, rel=0.05)
+    assert r_dip["latency_x"] == pytest.approx(8.84, rel=0.05)
+    assert r_adip["latency_x"] == pytest.approx(5.2, rel=0.05)
+
+
+def test_fig9_memory_headlines(reports):
+    r_adip = compare(reports, "ADiP-64x64")["D-Legion-8L"]
+    assert r_adip["mem_x"] == pytest.approx(2.5, rel=0.05)
+    adip, dleg = reports[2], reports[3]
+    proj_x = (adip.stages["qkv_proj"].mem_bytes
+              / dleg.stages["qkv_proj"].mem_bytes)
+    assert proj_x == pytest.approx(3.8, rel=0.05)
+    ws = reports[0]
+    proj_ws = (ws.stages["qkv_proj"].mem_bytes
+               / dleg.stages["qkv_proj"].mem_bytes)
+    assert proj_ws == pytest.approx(7.6, rel=0.05)
+
+
+def test_fig10_psum_headlines(reports):
+    r_adip = compare(reports, "ADiP-64x64")["D-Legion-8L"]
+    assert r_adip["psum_x"] == pytest.approx(2.1, rel=0.05)
+    adip, dleg = reports[2], reports[3]
+    score_x = (adip.stages["attn_score"].psum_bytes
+               / dleg.stages["attn_score"].psum_bytes)
+    assert score_x == pytest.approx(3.0, rel=0.02)
+
+
+def test_ops_conserved_across_architectures(reports):
+    ops = {r.total_ops for r in reports}
+    assert len(ops) == 1, "same workload must have same op count everywhere"
+
+
+def test_gqa_reduces_everything():
+    wl_mha = attention_workloads(bitnet_1_58b())
+    wl_gqa = attention_workloads(bitnet_1_58b_kv())
+    for cfg in (ws_64(), dlegion()):
+        mha, gqa = simulate(cfg, wl_mha), simulate(cfg, wl_gqa)
+        assert gqa.total_cycles < mha.total_cycles
+        assert gqa.total_mem_gb < mha.total_mem_gb
+
+
+def test_ztb_sparsity_speeds_up_and_saves_memory():
+    wl = attention_workloads(bitnet_1_58b())
+    dense = simulate(dlegion(), wl)
+    sparse = simulate(dlegion(), wl, ztb=ZTBStats(0.5, 0.5, 10, 80))
+    assert sparse.total_cycles < dense.total_cycles
+    assert sparse.total_mem_gb < dense.total_mem_gb
+    assert sparse.total_psum_gb < dense.total_psum_gb
+    # act-to-act (int8) workloads are unaffected — ZTB is on weights
+    assert (sparse.stages["attn_score"].cycles
+            == dense.stages["attn_score"].cycles)
+
+
+def test_tpuv4i_psum_parity():
+    """Paper Fig 11(d): D-Legion V2 and TPUv4i have equal psum traffic."""
+    wl = attention_workloads(bitnet_1_58b())
+    v2 = simulate(dlegion(32), wl)
+    tpu = simulate(tpuv4i(), wl)
+    assert v2.total_psum_gb == pytest.approx(tpu.total_psum_gb, rel=1e-6)
+
+
+def test_legion_scaling_peak_linear():
+    for legions in (8, 16, 32, 64):
+        assert dlegion(legions).peak_tops(4) == \
+            pytest.approx(135.68 * legions / 8)

@@ -1,0 +1,56 @@
+"""End-to-end system behaviour: QAT-train a tiny BitNet model, checkpoint,
+restart, quantize for serving, and serve it — the full paper pipeline at
+container scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data import synthetic_batch
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.engine import prepare_params
+from repro.train import (
+    AdamW,
+    Checkpointer,
+    TrainingRunner,
+    build_train_step,
+    cosine_schedule,
+    init_train_state,
+)
+
+
+def test_full_pipeline(tmp_path):
+    cfg = reduced(get_config("bitnet-1.58b"))      # ternary QAT on
+    api = build_model(cfg)
+    opt = AdamW(lr=cosine_schedule(2e-3, 5, 40), weight_decay=0.0)
+    stepfn = jax.jit(build_train_step(api, opt, grad_accum=2))
+    batch_fn = lambda s: {k: jnp.asarray(v) for k, v in
+                          synthetic_batch(cfg, batch=4, seq=64,
+                                          step=s).items()}
+
+    losses = []
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    runner = TrainingRunner(
+        stepfn, batch_fn, state, Checkpointer(str(tmp_path)), ckpt_every=10,
+        log_fn=lambda s, m: losses.append(float(m["loss"])),
+    )
+    runner.run(30, install_signal_handler=False)
+    assert losses[-1] < losses[0], "QAT training must reduce loss"
+
+    # restart continues from the checkpoint
+    runner2 = TrainingRunner(
+        stepfn, batch_fn, init_train_state(api, opt, jax.random.PRNGKey(1)),
+        Checkpointer(str(tmp_path)), ckpt_every=10,
+    )
+    runner2.run(35, install_signal_handler=False)
+    assert runner2.start_step == 30
+
+    # offline ternary quantization + continuous-batching serving
+    params = prepare_params(runner2.state.params)
+    eng = ServeEngine(api, params, max_slots=2, max_seq=96)
+    for i in range(3):
+        eng.submit(np.arange(1, 8 + i), max_new_tokens=8)
+    done = eng.run_until_done()
+    assert len(done) == 3
+    assert all(len(r.output) == 8 for r in done)

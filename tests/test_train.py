@@ -1,0 +1,133 @@
+"""Training substrate: optimizer, step builders, schedules, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import synthetic_batch
+from repro.distributed import collectives
+from repro.models import build_model
+from repro.train import (
+    AdamW,
+    build_train_step,
+    cosine_schedule,
+    global_norm,
+    init_train_state,
+)
+
+
+def _setup(arch="smollm-360m", **cfg_kw):
+    cfg = reduced(get_config(arch)).replace(**cfg_kw)
+    api = build_model(cfg)
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    batch_fn = lambda s: {k: jnp.asarray(v) for k, v in
+                          synthetic_batch(cfg, batch=4, seq=64,
+                                          step=s).items()}
+    return cfg, api, opt, state, batch_fn
+
+
+def test_loss_decreases():
+    _, api, opt, state, batch_fn = _setup()
+    step = jax.jit(build_train_step(api, opt))
+    losses = []
+    for s in range(8):
+        state, m = step(state, batch_fn(s))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_grad_accum_equivalence():
+    _, api, opt, state, batch_fn = _setup(dtype="float32")
+    s1 = jax.jit(build_train_step(api, opt, grad_accum=1))
+    s2 = jax.jit(build_train_step(api, opt, grad_accum=2))
+    batch = batch_fn(0)
+    _, m1 = s1(state, batch)
+    _, m2 = s2(state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]),
+                                                   rel=1e-3)
+
+
+def test_adamw_against_manual_reference():
+    opt = AdamW(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                clip_norm=1e9)
+    params = {"w": jnp.array([1.0, -2.0])}
+    grads = {"w": jnp.array([0.5, 0.5])}
+    st = opt.init(params)
+    new, st2, gnorm = opt.update(grads, st, params)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    expect = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    assert float(new["w"][0]) == pytest.approx(expect, rel=1e-5)
+    assert float(gnorm) == pytest.approx(np.sqrt(0.5), rel=1e-5)
+
+
+def test_clip_norm_applies():
+    opt = AdamW(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros((3,))}
+    grads = {"w": jnp.array([10.0, 0.0, 0.0])}
+    _, _, gnorm = opt.update(grads, opt.init(params), params)
+    assert float(gnorm) == pytest.approx(10.0)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, min_ratio=0.1)
+    assert float(lr(jnp.array(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.array(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(lr(jnp.array(100))) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr(jnp.array(55))) > float(lr(jnp.array(90)))
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+# --------------------------------------------------------------------------- #
+# gradient compression (pod-axis int8 + error feedback)
+# --------------------------------------------------------------------------- #
+
+def test_compression_roundtrip_error_bound(rng):
+    g = jnp.array(rng.standard_normal((64,)), jnp.float32)
+    q, scale = collectives.quantize_int8(g)
+    err = np.abs(np.asarray(collectives.dequantize_int8(q, scale) - g))
+    assert err.max() <= float(scale) * 0.51
+
+
+def test_error_feedback_accumulates(rng):
+    """Over many steps, mean compressed gradient -> mean true gradient."""
+    g = jnp.array(rng.standard_normal((128,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        q, scale, err = collectives.compress_with_feedback(g, err)
+        total = total + collectives.dequantize_int8(q, scale)
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g),
+                               atol=float(jnp.abs(g).max()) / 100)
+
+
+def test_compressed_psum_in_shard_map():
+    """2-pod compressed all-reduce == mean of member grads (within int8
+    tolerance), on a host mesh."""
+    from jax.sharding import PartitionSpec as P
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 host devices (run via test_dryrun subproc)")
+    mesh = jax.make_mesh((2,), ("pod",))
+    g = jnp.stack([jnp.ones((8,)), 3 * jnp.ones((8,))])
+    e = jnp.zeros((2, 8))
+
+    def f(g, e):
+        out, new_e = collectives.compressed_psum_pod({"w": g[0]},
+                                                     {"w": e[0]}, "pod")
+        return out["w"][None], new_e["w"][None]
+
+    out, _ = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                           out_specs=(P("pod"), P("pod")))(g, e)
+    np.testing.assert_allclose(np.asarray(out[0]), 2 * np.ones(8),
+                               rtol=0.02)
