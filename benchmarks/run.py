@@ -13,7 +13,7 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import dse, evaluation, kernel_bench
+    from benchmarks import dse, evaluation, kernel_bench, legion_runtime
 
     which = set(sys.argv[1:])
 
@@ -28,6 +28,8 @@ def main() -> None:
         rows += evaluation.run()
     if want("kernel"):
         rows += kernel_bench.run()
+    if want("legion") or want("runtime"):
+        rows += legion_runtime.run()
     print(f"# {len(rows)} benchmark rows, all paper-headline asserts passed",
           file=sys.stderr)
 

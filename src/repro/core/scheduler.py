@@ -29,7 +29,14 @@ from repro.core.workloads import (
 
 @dataclasses.dataclass(frozen=True)
 class Assignment:
-    """One unit of work placed on one Legion in one round."""
+    """One unit of work placed on one Legion in one round.
+
+    ``k_tiles``/``k_window`` make the psum accumulation explicit: the
+    assignment's GEMM executes as ``k_tiles`` K-windows of ``k_window``
+    elements (one window = the C cores' K-split, spatially reduced by the
+    Legion accumulators), so a runtime performs exactly ``k_tiles`` psum
+    rounds — the first write-only, the rest read-modify-write.
+    """
 
     legion: int
     round: int
@@ -37,6 +44,8 @@ class Assignment:
     n_lo: int                # N-slice [n_lo, n_hi) of the instance's GEMM
     n_hi: int
     multicast_group: int     # Legions sharing stationary tiles (KV group id)
+    k_tiles: int = 1         # KT = ceil(K / (C*D)) psum accumulation rounds
+    k_window: int = 0        # K elements per round (C*D); 0 = un-annotated
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +54,7 @@ class StagePlan:
     mapping: str
     assignments: List[Assignment]
     rounds: int
+    weight_bits: int = 8     # stationary-operand precision (mode selection)
 
     def legions_used(self) -> int:
         return len({a.legion for a in self.assignments})
@@ -59,6 +69,8 @@ class StagePlan:
 
 def plan_stage(cfg: AcceleratorConfig, w: GEMMWorkload) -> StagePlan:
     L = cfg.units
+    k_window = cfg.cores * cfg.d
+    k_tiles = max(math.ceil(w.k / k_window), 1)
     assignments: List[Assignment] = []
     if w.mapping == HEAD_PER_UNIT and L > 1:
         rounds = math.ceil(w.count / L)
@@ -67,6 +79,7 @@ def plan_stage(cfg: AcceleratorConfig, w: GEMMWorkload) -> StagePlan:
             assignments.append(Assignment(
                 legion=leg, round=rnd, instance=inst, n_lo=0, n_hi=w.n,
                 multicast_group=inst // max(w.kv_group, 1),
+                k_tiles=k_tiles, k_window=k_window,
             ))
     else:
         # N-partition: every Legion takes an N-slice; instances iterate.
@@ -82,9 +95,11 @@ def plan_stage(cfg: AcceleratorConfig, w: GEMMWorkload) -> StagePlan:
                 assignments.append(Assignment(
                     legion=leg, round=inst, instance=inst, n_lo=lo, n_hi=hi,
                     multicast_group=group,
+                    k_tiles=k_tiles, k_window=k_window,
                 ))
     return StagePlan(stage=w.stage, mapping=w.mapping,
-                     assignments=assignments, rounds=rounds)
+                     assignments=assignments, rounds=rounds,
+                     weight_bits=w.weight_bits)
 
 
 def plan_model(

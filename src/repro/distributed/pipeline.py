@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def gpipe(
     stage_fn: Callable,            # (stage_params, x) -> y  (same shape)
@@ -75,7 +77,7 @@ def gpipe(
         return jax.lax.psum(outputs * mask, axis)
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mesh,
         in_specs=(spec_params, P()),
         out_specs=P(),

@@ -30,6 +30,14 @@ from typing import Dict, List, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import abstract_mesh  # re-export: device-free rule meshes
+
+__all__ = [
+    "Rules", "abstract_mesh", "active_rules", "constrain",
+    "constrain_layer_params", "make_rules", "param_shardings",
+    "spec_for_path", "use_rules",
+]
+
 
 class Rules:
     """Active sharding rules: logical axis -> mesh axis (or None)."""

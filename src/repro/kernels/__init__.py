@@ -8,4 +8,30 @@ jit wrapper with backend selection) and ref.py (pure-jnp oracle):
 - block_sparse:    ZTB-driven CSR-of-blocks GEMM with scalar prefetch
 - flash_attention: causal online-softmax attention w/ GQA KV multicast
 - ssd:             Mamba-2 chunked state-space scan (SSM/hybrid archs)
+
+The GEMM-shaped subpackages additionally expose a uniform ``tile_gemm``
+entry point (same ``(x, w, **kw) -> out[M, N]`` contract) so the legion
+runtime can dispatch a StagePlan tile to any backend; the dense reference
+backend of that contract lives here as :func:`dense_tile_gemm`.
 """
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_tile_gemm(x: jnp.ndarray, w: jnp.ndarray, **_ignored) -> jnp.ndarray:
+    """``out[M, N] = x[M, K] @ w[K, N]`` — the dense reference backend.
+
+    Integer operands accumulate in int32 (the PE datapath); floats in f32.
+    """
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    acc = (
+        jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    )
+    return jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=acc,
+    )

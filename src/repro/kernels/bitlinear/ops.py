@@ -40,6 +40,34 @@ def bitlinear_matmul(
     return bitlinear_matmul_ref(x_int8, w_packed, bits=bits)
 
 
+def tile_gemm(
+    x_int8: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    *,
+    bits: int = 2,
+    backend: str = "reference",
+    interpret: bool | None = None,
+    **_ignored,
+) -> jnp.ndarray:
+    """Uniform tile-GEMM entry point (legion runtime contract).
+
+    ``w_packed`` is K-major packed uint8 (see quant.packing); arbitrary tile
+    shapes are accepted: the reference path handles them natively and the
+    Pallas path runs the whole tile as a single grid cell so the MXU block
+    divisibility constraints never bite on runtime-sized windows.
+    """
+    if backend == "pallas":
+        m, k = x_int8.shape
+        n = w_packed.shape[1]
+        if interpret is None:
+            interpret = not _on_tpu()
+        return _pallas_matmul(
+            x_int8, w_packed, bits=bits, bm=m, bn=n, bk=k,
+            interpret=interpret,
+        )
+    return bitlinear_matmul_ref(x_int8, w_packed, bits=bits)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "backend"))
 def bitlinear_apply(
     x: jnp.ndarray,

@@ -41,3 +41,49 @@ def ztb_matmul(
             bm=bm, bn=bn, bk=bk, interpret=interpret,
         )
     return block_sparse_matmul_ref(x, w, block_nonzero, bk=bk, bn=bn)
+
+
+def tile_gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_nonzero: np.ndarray | None = None,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    backend: str = "reference",
+    interpret: bool | None = None,
+    **_ignored,
+) -> jnp.ndarray:
+    """Uniform tile-GEMM entry point (legion runtime contract).
+
+    ``w`` arrives dense; if no ZTB mask is supplied one is derived from the
+    actual zero blocks of ``w`` (the offline ZTB build).  A supplied mask is
+    applied to ``w`` up front (at the mask's own block granularity), so the
+    shape fallbacks below can re-derive blocks without ever resurrecting a
+    pruned-but-nonzero block.  Block shapes fall back to the whole tile when
+    the runtime's window/slice geometry does not divide the defaults —
+    semantics are unchanged, only skip granularity.
+    """
+    k, n = w.shape
+    if block_nonzero is not None:
+        # fold the mask into w at the mask's own block granularity; blocks
+        # are then re-derived from w's zeros below, the single source of
+        # truth for every backend/fallback combination
+        mk, mn = block_nonzero.shape
+        expanded = np.repeat(
+            np.repeat(np.asarray(block_nonzero), -(-k // mk), axis=0),
+            -(-n // mn), axis=1,
+        )[:k, :n]
+        w = w * jnp.asarray(expanded, dtype=w.dtype)
+    if k % bk or n % bn:
+        bk, bn = k, n
+    if backend == "pallas" and x.shape[0] % bm:
+        bm = x.shape[0]
+        bk, bn = k, n
+    wb = np.asarray(w).reshape(k // bk, bk, n // bn, bn)
+    block_nonzero = np.any(wb != 0, axis=(1, 3))
+    return ztb_matmul(
+        x, w, block_nonzero, bm=bm, bn=bn, bk=bk,
+        backend=backend, interpret=interpret,
+    )

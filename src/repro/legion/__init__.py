@@ -1,0 +1,31 @@
+"""Legion runtime — executes scheduler StagePlans through the kernels.
+
+The subsystem that closes the loop between the repo's three models of
+D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
+
+- runtime:  plan executor w/ psum-accumulator emulation + mode dispatch
+- modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
+- trace:    NoC-dedup traffic measurement + simulate() cross-validation
+"""
+from repro.legion.modes import ModeSpec, select_mode
+from repro.legion.runtime import (
+    ExecutionResult,
+    PlanCoverageError,
+    execute_plan,
+    execute_workload,
+    synthesize_operands,
+    validate_coverage,
+)
+from repro.legion.trace import (
+    StageValidation,
+    TrafficTotals,
+    TrafficTracer,
+    cross_validate,
+)
+
+__all__ = [
+    "ExecutionResult", "ModeSpec", "PlanCoverageError", "StageValidation",
+    "TrafficTotals", "TrafficTracer", "cross_validate", "execute_plan",
+    "execute_workload", "select_mode", "synthesize_operands",
+    "validate_coverage",
+]

@@ -1,0 +1,438 @@
+"""Legion runtime — numerical execution of scheduler StagePlans (SS IV-B/C).
+
+The missing link between the repo's three models of D-Legion: this executor
+consumes the orchestrator's explicit :class:`~repro.core.scheduler.StagePlan`
+and actually runs every :class:`Assignment`'s N-slice GEMM, per Legion, per
+round, dispatching tiles to the kernel backend the execution mode selects
+(dense reference / packed-ternary ``bitlinear`` / ZTB-driven
+``block_sparse``) and reducing partial sums the way the paper's parallel
+accumulators do:
+
+* each K-window (``C * D`` elements — the C cores' K-split) produces one
+  spatial partial sum: with ``emulate_cores=True`` the window is literally
+  computed as C per-core ``D``-wide GEMMs and reduced across cores, the
+  accumulator tree's adder-level behaviour;
+* windows accumulate temporally into psum banks — ``cfg.accumulators``
+  parallel banks serve the N-tiles of a pass round-robin, so at most that
+  many tiles are in flight at once;
+* ZTB fully-sparse windows are skipped outright (no fetch, no psum round);
+  partially-sparse windows only gate the cores holding zero tiles.
+
+Every byte the execution moves is reported to a
+:class:`~repro.legion.trace.TrafficTracer`, which deduplicates multicast
+fetches — measured totals are then comparable to ``simulate()``'s analytic
+formulas (see ``repro.legion.trace.cross_validate``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.config import AcceleratorConfig
+from repro.core.scheduler import StagePlan, plan_stage
+from repro.core.sparsity import ZeroTileBook, ZTBStats, ztb_from_weight
+from repro.core.workloads import GEMMWorkload, N_PARTITION
+from repro.kernels import dense_tile_gemm
+from repro.legion.modes import BITLINEAR, BLOCK_SPARSE, ModeSpec, select_mode
+from repro.legion.trace import TrafficTracer
+from repro.quant.packing import pack_2bit_kmajor, pack_4bit_kmajor
+
+
+class PlanCoverageError(ValueError):
+    """A StagePlan's assignments do not exactly tile an instance's N-range."""
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    """Outputs + measured traffic of one executed StagePlan."""
+
+    outputs: np.ndarray            # [count, M, N] int32 (or float32)
+    trace: TrafficTracer
+    mode: ModeSpec
+    plan: StagePlan
+    ztb_stats: Optional[ZTBStats] = None
+
+    @property
+    def output(self) -> np.ndarray:
+        """Single-instance convenience view."""
+        if self.outputs.shape[0] != 1:
+            raise ValueError(f"{self.outputs.shape[0]} instances; use .outputs")
+        return self.outputs[0]
+
+
+def validate_coverage(
+    plan: StagePlan, *, n: Optional[int] = None, count: Optional[int] = None,
+) -> Dict[int, List[Tuple[int, int]]]:
+    """Check every instance's N-range [0, n) is tiled exactly once.
+
+    Returns instance -> sorted (n_lo, n_hi) slices.  Raises
+    :class:`PlanCoverageError` on gaps, overlaps, or missing instances.
+    """
+    slices: Dict[int, List[Tuple[int, int]]] = {}
+    for a in plan.assignments:
+        slices.setdefault(a.instance, []).append((a.n_lo, a.n_hi))
+    if count is not None and set(slices) != set(range(count)):
+        raise PlanCoverageError(
+            f"instances covered {sorted(slices)} != 0..{count - 1}"
+        )
+    for inst, ss in slices.items():
+        ss.sort()
+        full_n = n if n is not None else ss[-1][1]
+        if ss[0][0] != 0 or ss[-1][1] != full_n:
+            raise PlanCoverageError(
+                f"instance {inst}: slices span [{ss[0][0]}, {ss[-1][1]}) "
+                f"!= [0, {full_n})"
+            )
+        for (l1, h1), (l2, h2) in zip(ss, ss[1:]):
+            if h1 != l2:
+                raise PlanCoverageError(
+                    f"instance {inst}: slice [{l1},{h1}) then [{l2},{h2}) "
+                    f"({'overlap' if h1 > l2 else 'gap'})"
+                )
+    return slices
+
+
+# --------------------------------------------------------------------------- #
+# Execution
+# --------------------------------------------------------------------------- #
+
+def _instance_view(arr: np.ndarray, inst: int, ndim: int) -> np.ndarray:
+    return arr if arr.ndim == ndim else arr[inst]
+
+def _pad_axis(arr: np.ndarray, axis: int, target: int) -> np.ndarray:
+    if arr.shape[axis] == target:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, target - arr.shape[axis])
+    return np.pad(arr, pad)
+
+
+def _build_books(
+    w: np.ndarray, count: int, cfg: AcceleratorConfig, mode: ModeSpec,
+) -> List[ZeroTileBook]:
+    """Offline ZTB build, one book per instance, aligned with the runtime's
+    window (C tiles of D rows) / N-tile (R*D columns) geometry."""
+    return [
+        ztb_from_weight(
+            np.asarray(_instance_view(w, i, 2)),
+            block_k=cfg.d, block_n=mode.n_tile(cfg.d), window=cfg.cores,
+        )
+        for i in range(count)
+    ]
+
+
+def combined_ztb_stats(books: Sequence[ZeroTileBook]) -> ZTBStats:
+    stats = [b.stats() for b in books]
+    nw = sum(s.num_windows for s in stats)
+    nt = sum(s.num_tiles for s in stats)
+    return ZTBStats(
+        fully_sparse_fraction=(
+            sum(s.fully_sparse_fraction * s.num_windows for s in stats) / nw
+            if nw else 0.0
+        ),
+        zero_tile_fraction=(
+            sum(s.zero_tile_fraction * s.num_tiles for s in stats) / nt
+            if nt else 0.0
+        ),
+        num_windows=nw,
+        num_tiles=nt,
+    )
+
+
+def execute_plan(
+    cfg: AcceleratorConfig,
+    plan: StagePlan,
+    x: np.ndarray,
+    w: np.ndarray,
+    *,
+    mode: Optional[ModeSpec] = None,
+    ztb: Union[None, bool, ZeroTileBook, Sequence[ZeroTileBook]] = None,
+    tracer: Optional[TrafficTracer] = None,
+    granularity: str = "window",
+    kernel_backend: str = "reference",
+    emulate_cores: bool = False,
+    accumulators: Optional[int] = None,
+) -> ExecutionResult:
+    """Run every assignment of ``plan`` and return outputs + traffic.
+
+    Args:
+      x: activations — [M, K] (one stream shared by all instances) or
+         [count, M, K] (per-instance, e.g. per-head Q).
+      w: stationary operand — [K, N] or [count, K, N], canonical dense
+         (int8 for quantized modes; the runtime packs for the bitlinear
+         backend itself).
+      mode: execution mode; defaults to
+         ``select_mode(cfg, plan.weight_bits, sparse=ztb is not None)``.
+      ztb: ``True`` builds ZeroTileBooks offline from ``w``'s actual zero
+         blocks; or pass pre-built book(s).  Fully-sparse windows are
+         skipped, partially-sparse windows gate cores.
+      granularity: ``"window"`` runs the explicit psum-accumulator loop
+         (one backend call per K-window, the paper's dataflow); ``"kernel"``
+         issues one whole-slice kernel call per assignment (e.g. the Pallas
+         bitlinear / block-sparse kernels, interpret mode on CPU) — traffic
+         is accounted identically.
+      kernel_backend: forwarded to the kernel ops ("reference" | "pallas").
+      emulate_cores: compute each window as C per-core D-wide GEMMs reduced
+         spatially (slower, bit-exact; exercises the accumulator tree).
+      accumulators: parallel psum banks (default ``cfg.accumulators``).
+    """
+    if granularity not in ("window", "kernel"):
+        raise ValueError(f"granularity={granularity!r}")
+    x = np.asarray(x)
+    w = np.asarray(w)
+    if not plan.assignments:
+        raise ValueError(f"plan {plan.stage!r} has no assignments")
+    count = max(a.instance for a in plan.assignments) + 1
+    m, k = x.shape[-2], x.shape[-1]
+    n = w.shape[-1]
+    if w.shape[-2] != k:
+        raise ValueError(f"x K={k} vs w K={w.shape[-2]}")
+    validate_coverage(plan, n=n, count=count)
+
+    if mode is None:
+        mode = select_mode(cfg, plan.weight_bits,
+                           sparse=ztb not in (None, False))
+    tracer = tracer if tracer is not None else TrafficTracer()
+
+    a0 = plan.assignments[0]
+    k_window = a0.k_window or cfg.cores * cfg.d
+    k_tiles = a0.k_tiles if a0.k_window else max(math.ceil(k / k_window), 1)
+    k_pad = k_tiles * k_window
+    n_tile = mode.n_tile(cfg.d)
+
+    # ---- operand preparation -------------------------------------------- #
+    x_pad = _pad_axis(x, x.ndim - 1, k_pad)
+    w_pad = _pad_axis(w, w.ndim - 2, k_pad)
+
+    books: Optional[List[ZeroTileBook]] = None
+    if ztb is True:
+        books = _build_books(w_pad, count, cfg, mode)
+    elif isinstance(ztb, ZeroTileBook):
+        books = [ztb] * count
+    elif ztb not in (None, False):
+        books = list(ztb)
+        if len(books) != count:
+            raise ValueError(f"{len(books)} books for {count} instances")
+
+    packed: Optional[List[np.ndarray]] = None
+    if mode.backend == BITLINEAR:
+        factor = 8 // mode.weight_bits
+        if k_window % factor or cfg.d % factor:
+            raise ValueError(
+                f"K window {k_window} / D {cfg.d} not divisible by packing "
+                f"factor {factor}"
+            )
+        pack = pack_2bit_kmajor if mode.weight_bits == 2 else pack_4bit_kmajor
+        packed = [
+            np.asarray(pack(_instance_view(w_pad, i, 2).astype(np.int8)))
+            for i in range(count)
+        ]
+
+    int_path = (np.issubdtype(x.dtype, np.integer)
+                and np.issubdtype(w.dtype, np.integer))
+    out = np.zeros((count, m, n),
+                   dtype=np.int32 if int_path else np.float32)
+
+    wbytes = mode.weight_bytes_per_element(cfg)
+    abytes = cfg.dtype_bytes
+    # units==1: no NoC — every instance refetches its stationary tiles and
+    # streams privately; padded-tile accounting matches the analytic model.
+    multicast = cfg.units > 1
+    # One activation broadcast can only serve several Legions when they
+    # consume the *same* data: a shared input matrix (x is [M, K]) or an
+    # N-partitioned instance (all Legions slice one GEMM).  Distinct
+    # per-head inputs under head-per-unit each stream privately.
+    broadcast_stream = multicast and (
+        x.ndim == 2 or plan.mapping == N_PARTITION
+    )
+    # Stationary tiles move padded to the full R*D grid width, except under
+    # multi-Legion N-partitioning where the memory controller clips the last
+    # Legion's fetch to the matrix edge (the analytic model's cap).
+    clip_weight_tiles = multicast and plan.mapping == N_PARTITION
+    banks = accumulators or cfg.accumulators
+
+    def backend_call(xs: np.ndarray, inst: int, k_lo: int, k_hi: int,
+                     c_lo: int, c_hi: int) -> np.ndarray:
+        """One tile GEMM: x rows [*, k_lo:k_hi] @ w[k_lo:k_hi, c_lo:c_hi]."""
+        if mode.backend == BITLINEAR:
+            factor = 8 // mode.weight_bits
+            wp = packed[inst][k_lo // factor:k_hi // factor, c_lo:c_hi]
+            from repro.kernels.bitlinear.ops import tile_gemm as bl_tile
+            return np.asarray(bl_tile(
+                xs[:, k_lo:k_hi].astype(np.int8), wp,
+                bits=mode.weight_bits, backend=kernel_backend,
+            ))
+        ws = _instance_view(w_pad, inst, 2)[k_lo:k_hi, c_lo:c_hi]
+        return np.asarray(dense_tile_gemm(xs[:, k_lo:k_hi], ws))
+
+    def kernel_call(xs: np.ndarray, inst: int, lo: int, hi: int) -> np.ndarray:
+        """Whole-slice kernel dispatch (Pallas path exercisable)."""
+        if mode.backend == BITLINEAR:
+            from repro.kernels.bitlinear.ops import tile_gemm as bl_tile
+            return np.asarray(bl_tile(
+                xs.astype(np.int8), packed[inst][:, lo:hi],
+                bits=mode.weight_bits, backend=kernel_backend,
+            ))
+        ws = _instance_view(w_pad, inst, 2)[:, lo:hi]
+        if mode.backend == BLOCK_SPARSE:
+            from repro.kernels.block_sparse.ops import tile_gemm as bs_tile
+            return np.asarray(bs_tile(
+                xs.astype(np.float32), ws.astype(np.float32),
+                backend=kernel_backend,
+            ))
+        return np.asarray(dense_tile_gemm(xs, ws))
+
+    for a in sorted(plan.assignments, key=lambda a: (a.round, a.legion)):
+        inst = a.instance
+        xs = _instance_view(x_pad, inst, 2)
+        book = books[inst] if books else None
+        wn = book.window_nonzero if book is not None else None
+        wkey = (a.multicast_group if multicast else ("inst", inst))
+
+        tiles = []
+        lo = a.n_lo
+        j = 0
+        while lo < a.n_hi:
+            tiles.append((j, lo, min(lo + n_tile, a.n_hi)))
+            lo += n_tile
+            j += 1
+
+        # Tiles are served by `banks` parallel accumulators: process them in
+        # bank-sized groups (numerically associative — ordering only).
+        for g in range(0, len(tiles), banks):
+            for (j, lo, hi) in tiles[g:g + banks]:
+                gtile = lo // n_tile      # global N-tile id (book column)
+                executed = 0
+                for i in range(k_tiles):
+                    if wn is not None and gtile < wn.shape[1] \
+                            and not wn[i, gtile]:
+                        continue          # fully-sparse window: skip outright
+                    if granularity == "window":
+                        if emulate_cores:
+                            partial = None
+                            for c in range(cfg.cores):
+                                if book is not None and \
+                                        gtile < book.tile_nonzero.shape[2] \
+                                        and not book.tile_nonzero[i, c, gtile]:
+                                    continue   # gated core (zero tile)
+                                k_lo = i * k_window + c * cfg.d
+                                p = backend_call(xs, inst, k_lo,
+                                                 k_lo + cfg.d, lo, hi)
+                                partial = p if partial is None else partial + p
+                            if partial is None:
+                                partial = 0
+                        else:
+                            partial = backend_call(
+                                xs, inst, i * k_window, (i + 1) * k_window,
+                                lo, hi,
+                            )
+                        out[inst, :, lo:hi] += partial
+                    # ---- traffic accounting (identical per granularity) --- #
+                    width = (hi - lo) if clip_weight_tiles else n_tile
+                    tracer.weight_tile(
+                        ("w", plan.stage, wkey, i, lo),
+                        k_window * width * wbytes,
+                    )
+                    akey_owner = a.round if broadcast_stream else ("inst",
+                                                                   inst)
+                    tracer.act_stream(
+                        ("a", plan.stage, akey_owner, j, i),
+                        m * k_window * abytes,
+                    )
+                    psum = (hi - lo) * m * 4.0
+                    tracer.psum(psum if executed == 0 else 2.0 * psum)
+                    executed += 1
+
+        if granularity == "kernel":
+            res = kernel_call(xs, inst, a.n_lo, a.n_hi)
+            out[inst, :, a.n_lo:a.n_hi] += res.astype(out.dtype)
+
+    return ExecutionResult(
+        outputs=out, trace=tracer, mode=mode, plan=plan,
+        ztb_stats=combined_ztb_stats(books) if books else None,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Workload-level convenience (synthetic operands, reference check)
+# --------------------------------------------------------------------------- #
+
+def synthesize_operands(
+    w: GEMMWorkload, *, seed: int = 0, ztb_sparsity: float = 0.0,
+    k_window: int = 0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Small-magnitude int8 operands for one workload.
+
+    Activations are shared ([M, K]) iff the workload streams one input to
+    every instance; weights are ternary for 2-bit stages.  With
+    ``ztb_sparsity`` a fraction of whole K-windows is zeroed across all
+    instances — block-structured sparsity with *uniform* fully-sparse
+    windows, so the simulator's global-fraction model matches exactly.
+    """
+    rng = np.random.default_rng(seed)
+    xshape = (w.m, w.k) if w.shared_input else (w.count, w.m, w.k)
+    x = rng.integers(-8, 9, size=xshape).astype(np.int8)
+    # KV-group instances share their stationary matrix (the data behind the
+    # paper's KV multicast) — generate one matrix per group and replicate.
+    groups = math.ceil(w.count / max(w.kv_group, 1))
+    # value range must be representable at the workload's precision
+    # (ternary for W1.58; [-8, 7] for 4-bit two's complement)
+    lohi = {2: (-1, 2), 4: (-8, 8)}.get(w.weight_bits, (-8, 9))
+    per_group = rng.integers(*lohi, size=(groups, w.k, w.n)).astype(np.int8)
+    weights = per_group[
+        np.arange(w.count) // max(w.kv_group, 1)
+    ].copy()
+    if ztb_sparsity > 0.0:
+        if not k_window:
+            raise ValueError("ztb_sparsity needs the plan's k_window")
+        k_tiles = math.ceil(w.k / k_window)
+        n_zero = int(k_tiles * ztb_sparsity)
+        zeroed = rng.choice(k_tiles, size=n_zero, replace=False)
+        for i in zeroed:
+            weights[:, i * k_window:(i + 1) * k_window, :] = 0
+    return x, weights
+
+
+def execute_workload(
+    cfg: AcceleratorConfig,
+    w: GEMMWorkload,
+    *,
+    seed: int = 0,
+    ztb_sparsity: float = 0.0,
+    check_outputs: bool = True,
+    granularity: str = "window",
+    kernel_backend: str = "reference",
+    emulate_cores: bool = False,
+) -> ExecutionResult:
+    """Plan + synthesize + execute one workload (single layer).
+
+    With ``check_outputs`` every instance's output is compared against the
+    plain ``x @ w`` dense reference — int32 accumulation, so equality is
+    exact and any scheduling/psum bug is a hard failure.
+    """
+    plan = plan_stage(cfg, w)
+    x, weights = synthesize_operands(
+        w, seed=seed, ztb_sparsity=ztb_sparsity,
+        k_window=plan.assignments[0].k_window if plan.assignments else 0,
+    )
+    res = execute_plan(
+        cfg, plan, x, weights,
+        ztb=True if ztb_sparsity > 0.0 else None,
+        granularity=granularity, kernel_backend=kernel_backend,
+        emulate_cores=emulate_cores,
+    )
+    if check_outputs:
+        for inst in range(w.count):
+            xi = _instance_view(x, inst, 2).astype(np.int64)
+            ref = (xi @ weights[inst].astype(np.int64)).astype(np.int64)
+            got = res.outputs[inst].astype(np.int64)
+            if not np.array_equal(got, ref):
+                bad = int(np.sum(got != ref))
+                raise AssertionError(
+                    f"{w.stage} instance {inst}: runtime output != x @ w "
+                    f"reference at {bad} positions (mode {res.mode.name})"
+                )
+    return res

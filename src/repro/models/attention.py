@@ -217,7 +217,9 @@ def _context_parallel_flash(q, k, v, *, causal: bool, rules):
         bk = min(256, ks.shape[1])
         return _flash(qs, ks, vs, off, causal, bq, bk)
 
-    return jax.shard_map(
+    from repro.compat import shard_map
+
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(b_ax, seq_ax, None, None), P(b_ax, None, None, None),
                   P(b_ax, None, None, None)),

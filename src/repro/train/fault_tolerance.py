@@ -70,17 +70,24 @@ class TrainingRunner:
                 pass   # non-main thread (tests)
         step = self.maybe_restore()
         metrics: Dict = {}
-        while step < total_steps:
-            if fail_at is not None and step == fail_at:
-                raise RuntimeError(f"injected failure at step {step}")
-            batch = self.batch_fn(step)
-            self.state, metrics = self.step_fn(self.state, batch)
-            step += 1
-            self.log_fn(step, metrics)
-            if step % self.ckpt_every == 0 or self._preempted:
-                self.ckpt.save(step, self.state)
-            if self._preempted:
-                self.ckpt.wait()
-                break
+        try:
+            while step < total_steps:
+                if fail_at is not None and step == fail_at:
+                    raise RuntimeError(f"injected failure at step {step}")
+                batch = self.batch_fn(step)
+                self.state, metrics = self.step_fn(self.state, batch)
+                step += 1
+                self.log_fn(step, metrics)
+                if step % self.ckpt_every == 0 or self._preempted:
+                    self.ckpt.save(step, self.state)
+                if self._preempted:
+                    self.ckpt.wait()
+                    break
+        except BaseException:
+            # Crash consistency: save() already snapshotted the state to host
+            # memory, so let the in-flight disk write commit before the
+            # process goes down — the restart resumes from it.
+            self.ckpt.wait()
+            raise
         self.ckpt.save(step, self.state, blocking=True)
         return metrics

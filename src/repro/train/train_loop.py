@@ -114,7 +114,9 @@ def build_compressed_train_step(
             )
             return loss, grads, new_ef
 
-        loss, grads, new_ef = jax.shard_map(
+        from repro.compat import shard_map
+
+        loss, grads, new_ef = shard_map(
             inner, mesh=mesh,
             in_specs=(P(), P(), P(pod_axis)),
             out_specs=(P(), P(), P()),

@@ -1,0 +1,238 @@
+"""Legion runtime: plan execution, psum emulation, traffic cross-validation.
+
+The acceptance gate for the runtime subsystem: outputs must equal the plain
+``x @ w`` reference bit-exactly in every mode, plans must tile each
+instance's N-range exactly, and runtime-measured traffic must agree with
+``simulate()``'s analytic formulas on the BitNet attention workloads for
+both a 1-Legion and an 8-Legion configuration.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dlegion, ws_64
+from repro.core.scheduler import plan_stage
+from repro.core.workloads import (
+    ATTN_SCORE,
+    HEAD_PER_UNIT,
+    N_PARTITION,
+    OUT_PROJ,
+    QKV_PROJ,
+    GEMMWorkload,
+    attention_workloads,
+    bitnet_1_58b,
+    bitnet_1_58b_kv,
+)
+from repro.legion import (
+    PlanCoverageError,
+    cross_validate,
+    execute_plan,
+    execute_workload,
+    select_mode,
+    synthesize_operands,
+    validate_coverage,
+)
+from repro.legion.modes import BITLINEAR, BLOCK_SPARSE, DENSE
+
+CFG = dlegion()   # 8 Legions x 8 cores x 16x16
+
+
+def _dense_w8():
+    return GEMMWorkload(stage=ATTN_SCORE, m=32, k=128, n=128, weight_bits=8,
+                        count=4, kv_group=2, mapping=N_PARTITION)
+
+
+def _ternary_w2():
+    return GEMMWorkload(stage=QKV_PROJ, m=32, k=256, n=128, weight_bits=2,
+                        count=8, shared_input=True, mapping=HEAD_PER_UNIT)
+
+
+def _reference(x, weights, count):
+    out = []
+    for i in range(count):
+        xi = (x if x.ndim == 2 else x[i]).astype(np.int64)
+        out.append(xi @ weights[i].astype(np.int64))
+    return np.stack(out)
+
+
+# --------------------------------------------------------------------------- #
+# Output correctness — all three modes equal the dense reference
+# --------------------------------------------------------------------------- #
+
+def test_dense_mode_matches_reference():
+    w = _dense_w8()
+    res = execute_workload(CFG, w)       # check_outputs asserts internally
+    assert res.mode.backend == DENSE
+    x, weights = synthesize_operands(w)
+    ref = _reference(x, weights, w.count)
+    assert np.array_equal(res.outputs.astype(np.int64), ref)
+
+
+def test_ternary_bitlinear_mode_matches_reference():
+    w = _ternary_w2()
+    res = execute_workload(CFG, w)
+    assert res.mode.backend == BITLINEAR
+    assert res.mode.name == "W1.58" and res.mode.r == 4
+
+
+def test_w4_bitlinear_mode_matches_reference():
+    w = dataclasses.replace(_ternary_w2(), weight_bits=4)
+    res = execute_workload(CFG, w)   # values must stay in int4 [-8, 7]
+    assert res.mode.name == "W4" and res.mode.r == 2
+    assert res.mode.backend == BITLINEAR
+
+
+def test_ztb_sparse_mode_matches_reference():
+    w = _ternary_w2()
+    res = execute_workload(CFG, w, ztb_sparsity=0.5)
+    assert res.mode.backend == BLOCK_SPARSE
+    assert res.mode.sparse
+    # half the K-windows were pruned and the book saw them
+    assert res.ztb_stats is not None
+    assert res.ztb_stats.fully_sparse_fraction == pytest.approx(0.5)
+
+
+def test_sparse_skips_reduce_traffic_and_psum():
+    w = _ternary_w2()
+    dense = execute_workload(CFG, w).trace.totals
+    sparse = execute_workload(CFG, w, ztb_sparsity=0.5).trace.totals
+    assert sparse.weight_bytes == pytest.approx(dense.weight_bytes * 0.5)
+    assert sparse.act_bytes == pytest.approx(dense.act_bytes * 0.5)
+    assert sparse.psum_bytes < dense.psum_bytes
+
+
+def test_emulate_cores_bit_exact():
+    w = _dense_w8()
+    base = execute_workload(CFG, w)
+    cores = execute_workload(CFG, w, emulate_cores=True)
+    assert np.array_equal(base.outputs, cores.outputs)
+
+
+def test_accumulator_bank_count_is_associative():
+    w = _dense_w8()
+    plan = plan_stage(CFG, w)
+    x, weights = synthesize_operands(w)
+    one = execute_plan(CFG, plan, x, weights, accumulators=1)
+    many = execute_plan(CFG, plan, x, weights, accumulators=8)
+    assert np.array_equal(one.outputs, many.outputs)
+
+
+def test_head_streams_not_deduped_without_shared_input():
+    """Distinct per-head inputs cannot ride one broadcast: act traffic must
+    scale with the head count, not collapse to one stream per round."""
+    base = _ternary_w2()
+    shared = execute_workload(CFG, base).trace.totals
+    private = execute_workload(
+        CFG, dataclasses.replace(base, shared_input=False)
+    ).trace.totals
+    assert private.act_bytes == pytest.approx(shared.act_bytes * CFG.units)
+
+
+def test_block_sparse_tile_gemm_respects_caller_mask():
+    """A supplied pruning mask must zero blocks even where w is non-zero,
+    identically on the reference and Pallas (shape-fallback) paths."""
+    from repro.kernels.block_sparse.ops import tile_gemm as bs_tile
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((100, 256)).astype(np.float32)   # 100 % 128 != 0
+    w = rng.standard_normal((256, 256)).astype(np.float32)
+    mask = np.zeros((2, 2), dtype=bool)
+    mask[0, 0] = True
+    ref = np.asarray(bs_tile(x, w, block_nonzero=mask, backend="reference"))
+    pal = np.asarray(bs_tile(x, w, block_nonzero=mask, backend="pallas",
+                             interpret=True))
+    expect = x[:, :128] @ (w[:128, :] * np.repeat(
+        np.repeat(mask, 128, 0), 128, 1)[:128])
+    np.testing.assert_allclose(ref, expect, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(pal, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_granularity_pallas_interpret():
+    """Whole-slice dispatch through the actual Pallas kernels (interpret)."""
+    w2 = GEMMWorkload(stage=QKV_PROJ, m=32, k=256, n=128, weight_bits=2,
+                      count=2, shared_input=True, mapping=HEAD_PER_UNIT)
+    execute_workload(CFG, w2, granularity="kernel", kernel_backend="pallas")
+    w_sp = GEMMWorkload(stage=OUT_PROJ, m=128, k=256, n=1024, weight_bits=2,
+                        count=1, mapping=N_PARTITION)
+    res = execute_workload(CFG, w_sp, ztb_sparsity=0.5,
+                           granularity="kernel", kernel_backend="pallas")
+    assert res.mode.backend == BLOCK_SPARSE
+
+
+# --------------------------------------------------------------------------- #
+# Plan coverage
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("legions", [1, 8])
+@pytest.mark.parametrize("spec_fn", [bitnet_1_58b, bitnet_1_58b_kv])
+def test_bitnet_plans_cover_n_exactly(legions, spec_fn):
+    cfg = dlegion(legions=legions)
+    spec = dataclasses.replace(spec_fn(seq_len=128), layers=1)
+    for w in attention_workloads(spec):
+        plan = plan_stage(cfg, w)
+        slices = validate_coverage(plan, n=w.n, count=w.count)
+        assert set(slices) == set(range(w.count))
+
+
+def test_coverage_error_detected():
+    w = _dense_w8()
+    plan = plan_stage(CFG, w)
+    broken = dataclasses.replace(
+        plan, assignments=[a for a in plan.assignments if a.legion != 3]
+    )
+    with pytest.raises(PlanCoverageError):
+        validate_coverage(broken, n=w.n, count=w.count)
+
+
+def test_plan_k_tiling_annotation():
+    plan = plan_stage(CFG, _ternary_w2())
+    a = plan.assignments[0]
+    assert a.k_window == CFG.cores * CFG.d
+    assert a.k_tiles == -(-256 // a.k_window)
+    assert plan.weight_bits == 2
+
+
+# --------------------------------------------------------------------------- #
+# Mode selection
+# --------------------------------------------------------------------------- #
+
+def test_mode_matrix():
+    m2 = select_mode(CFG, 2)
+    assert (m2.name, m2.r, m2.backend, m2.packed) == ("W1.58", 4,
+                                                      BITLINEAR, True)
+    m4 = select_mode(CFG, 4)
+    assert (m4.name, m4.r, m4.backend) == ("W4", 2, BITLINEAR)
+    m8 = select_mode(CFG, 8)
+    assert (m8.name, m8.r, m8.backend) == ("W8", 1, DENSE)
+    msp = select_mode(CFG, 2, sparse=True)
+    assert (msp.name, msp.backend) == ("W1.58+ZTB", BLOCK_SPARSE)
+    # non-adaptive baseline: everything dense at R=1
+    mws = select_mode(ws_64(), 2)
+    assert (mws.r, mws.backend, mws.packed) == (1, DENSE, False)
+
+
+# --------------------------------------------------------------------------- #
+# Traffic cross-validation against simulate()
+# --------------------------------------------------------------------------- #
+
+def _assert_traffic_matches(cfg, spec, **kw):
+    wl = attention_workloads(dataclasses.replace(spec, layers=1))
+    validations = cross_validate(cfg, wl, rtol=0.05, **kw)
+    assert {v.stage for v in validations} == {
+        "qkv_proj", "attn_score", "attn_output", "out_proj",
+    }
+    for v in validations:
+        assert v.ok, str(v)
+
+
+def test_traffic_matches_simulator_8_legions_gqa():
+    _assert_traffic_matches(dlegion(legions=8), bitnet_1_58b_kv(seq_len=128))
+
+
+def test_traffic_matches_simulator_1_legion():
+    _assert_traffic_matches(dlegion(legions=1), bitnet_1_58b(seq_len=128))
+
+
+def test_traffic_matches_simulator_with_ztb():
+    _assert_traffic_matches(dlegion(legions=8), bitnet_1_58b(seq_len=128),
+                            ztb_sparsity=0.25)

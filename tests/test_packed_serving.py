@@ -8,8 +8,9 @@ from repro.quant.packing import pack_2bit_kmajor
 
 def test_pack_unpack_tree_roundtrip():
     from repro.launch.dryrun import _pack_tree, _unpack_tree
-    from jax.sharding import AbstractMesh, NamedSharding, PartitionSpec as P
-    mesh = jax.sharding.AbstractMesh((1, 1), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import abstract_mesh
+    mesh = abstract_mesh((1, 1), ("data", "model"))
     sh = NamedSharding(mesh, P(None, None))
     shapes = {"blocks": {"mlp": {"w1": jax.ShapeDtypeStruct(
         (2, 8, 16), jnp.bfloat16)}},

@@ -10,6 +10,7 @@ from repro.core.scheduler import kv_multicast_fanout, plan_model, plan_stage
 from repro.core.workloads import attention_workloads, bitnet_1_58b_kv
 from repro.distributed.sharding import (
     Rules,
+    abstract_mesh,
     constrain,
     make_rules,
     param_shardings,
@@ -22,7 +23,7 @@ from repro.distributed.sharding import (
 def _mesh():
     # AbstractMesh: rules/spec logic only reads shape + axis names, so tests
     # don't need 256 real devices
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_spec_dedupes_repeated_axes():
