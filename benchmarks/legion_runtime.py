@@ -1,15 +1,21 @@
-"""Runtime-vs-analytic traffic benchmark — the executable check of SS IV-B.
+"""Runtime-vs-analytic benchmark — the executable check of SS IV-B + eq. (2).
 
 Runs the BitNet attention workloads end-to-end through the legion runtime
 (one layer, synthetic int8 operands) on a 1-Legion and an 8-Legion config,
-and emits runtime-measured vs ``simulate()``-derived traffic per stage.
-Asserts every stage agrees within 5% — a red run means the simulator's
-formulas (and therefore every paper figure derived from them) diverged
-from what executing the schedule actually moves.
+and emits runtime-measured vs ``simulate()``-derived traffic AND cycles per
+stage.  Asserts every stage agrees within 5% — a red run means the
+simulator's formulas (and therefore every paper figure derived from them,
+the 8.2x latency and 135.68 TOPS headlines included) diverged from what
+executing the schedule actually moves / spends.
+
+The serve-path variant drives one BitNet decode step's projection GEMMs
+(wq/wk/wv/wo, w1/w2/w3) through ``repro.serve.legion_backend`` and reports
+per-token cycles and bytes, cross-validated the same way.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from benchmarks.common import emit, timed
 from repro.core import dlegion, simulate
@@ -20,7 +26,11 @@ def run():
     rows = []
     spec = dataclasses.replace(bitnet_1_58b_kv(seq_len=128), layers=1)
     workloads = attention_workloads(spec)
-    from repro.legion import cross_validate
+    from repro.legion import (
+        cross_validate,
+        cross_validate_cycles,
+        total_cycle_error,
+    )
 
     measured = {}
     for legions in (1, 8):
@@ -45,6 +55,25 @@ def run():
             },
         ))
 
+        # ---- cycle cross-validation (the latency behind Figs. 7/9) ------ #
+        cycle_vals, us = timed(
+            cross_validate_cycles, cfg, workloads, rtol=0.05, repeats=1,
+        )
+        for v in cycle_vals:
+            assert v.ok, f"{cfg.name}: {v}"
+        worst_cyc = max(v.rel_err for v in cycle_vals)
+        assert worst_cyc <= 0.05, f"{cfg.name}: cycle err {worst_cyc:.3f}"
+        total_meas = sum(v.measured for v in cycle_vals)
+        rows.append(emit(
+            f"legion_runtime/cycle_xval_{cfg.name}", us, {
+                "stages_ok": len(cycle_vals),
+                "worst_rel_err": worst_cyc,
+                "total_rel_err": total_cycle_error(cycle_vals),
+                "total_kcycles": total_meas / 1e3,
+                "ms_at_1ghz": total_meas / cfg.freq_hz * 1e3,
+            },
+        ))
+
     # NoC multicast reuse (SS IV-B): 8 Legions move *fewer* stationary bytes
     # than one Legion on the GQA model (KV tiles fetched once per group) and
     # the input broadcast gives the paper's L-x activation-stream reuse.
@@ -56,4 +85,42 @@ def run():
         "legion_runtime/noc_multicast_reuse", 0.0,
         {"weight_traffic_x": w1 / w8, "act_traffic_x": a1 / a8},
     ))
+    rows += _serve_path()
     return rows
+
+
+def _serve_path():
+    """One BitNet decode step through the serve-path Legion backend:
+    per-token cycles/bytes for the projection GEMMs, cross-validated."""
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serve.engine import prepare_params
+    from repro.serve.legion_backend import LegionServeBackend
+
+    model_cfg = reduced(get_config("bitnet-1.58b"))
+    api = build_model(model_cfg)
+    params = prepare_params(api.init(jax.random.PRNGKey(0)))
+    accel = dlegion()
+    backend = LegionServeBackend(accel, model_cfg, params)
+
+    # step_tally caches by row count — time the single cold execution
+    t0 = time.perf_counter()
+    tally = backend.step_tally(1)
+    us = (time.perf_counter() - t0) * 1e6
+    traffic_vals, cycle_vals = backend.cross_validate(m=1, rtol=0.05)
+    for v in traffic_vals + cycle_vals:
+        assert v.ok, f"serve decode: {v}"
+    worst_cyc = max(v.rel_err for v in cycle_vals)
+    assert worst_cyc <= 0.05, f"serve decode cycle err {worst_cyc:.3f}"
+    return [emit(
+        "legion_runtime/serve_decode_bitnet", us, {
+            "gemms": tally.gemms,
+            "cycles_per_token": tally.cycles,
+            "us_per_token_at_1ghz": tally.seconds(accel.freq_hz) * 1e6,
+            "weight_kb_per_token": tally.weight_bytes / 1e3,
+            "act_kb_per_token": tally.act_bytes / 1e3,
+            "worst_cycle_err": worst_cyc,
+        },
+    )]

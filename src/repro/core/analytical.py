@@ -42,6 +42,34 @@ def tile_pass_cycles(cfg: AcceleratorConfig, mt: int) -> int:
     return d * (mt + 1) + cfg.pipeline  # ADiP / D-Legion cores
 
 
+@dataclasses.dataclass(frozen=True)
+class PassBreakdown:
+    """Where one tile pass's cycles go, plus the per-work-chunk drain.
+
+    The single source of the decomposition both the analytic simulator
+    (``StageResult.cycle_breakdown``) and the legion runtime's counted
+    cycles (``repro.legion.latency.CycleCounter``) report — keeping the two
+    sides of the cycle cross-validation comparable term by term.
+    ``stream + fill + pipeline == tile_pass_cycles(cfg, mt)``.
+    """
+
+    stream: int    # MT row-tiles of D cycles streaming through the array
+    fill: int      # systolic fill (the "+1" D; WS sync-FIFOs pay 2D)
+    pipeline: int  # ADiP shared shifter/accumulator stages (P)
+    drain: int     # output drain per (unit, round) work chunk
+
+
+def pass_cycle_breakdown(cfg: AcceleratorConfig, mt: int) -> PassBreakdown:
+    stream = cfg.d * mt
+    pipeline = cfg.pipeline if cfg.dataflow is Dataflow.ADIP else 0
+    return PassBreakdown(
+        stream=stream,
+        fill=tile_pass_cycles(cfg, mt) - stream - pipeline,
+        pipeline=pipeline,
+        drain=2 * cfg.d if cfg.dataflow is Dataflow.WS else cfg.d,
+    )
+
+
 def unit_latency_cycles(
     cfg: AcceleratorConfig, m: int, k: int, n: int, weight_bits: int = 8,
     *, skipped_kt: int = 0,
@@ -56,7 +84,7 @@ def unit_latency_cycles(
     r = cfg.r(weight_bits)
     t = tiles(m, k, n, d=cfg.d, c=cfg.cores, r=r)
     kt_eff = max(t.kt - skipped_kt, 0)
-    drain = 2 * cfg.d if cfg.dataflow is Dataflow.WS else cfg.d
+    drain = pass_cycle_breakdown(cfg, t.mt).drain
     return kt_eff * t.nt * tile_pass_cycles(cfg, t.mt) + drain
 
 

@@ -21,7 +21,11 @@ import dataclasses
 import math
 from typing import Dict, Iterable, List, Optional
 
-from repro.core.analytical import tiles, unit_latency_cycles
+from repro.core.analytical import (
+    pass_cycle_breakdown,
+    tiles,
+    unit_latency_cycles,
+)
 from repro.core.config import AcceleratorConfig
 from repro.core.sparsity import ZTBStats
 from repro.core.workloads import (
@@ -40,10 +44,27 @@ class StageResult:
     weight_bytes: float = 0.0
     act_bytes: float = 0.0
     psum_bytes: float = 0.0
+    # Cycle decomposition (sums to ``cycles``): activation rows streaming
+    # through the array, systolic fill per tile pass, ADiP pipeline stages,
+    # and the output drain per (unit, round) — comparable component-wise to
+    # the legion runtime's counted cycles (repro.legion.latency).
+    stream_cycles: int = 0
+    fill_cycles: int = 0
+    pipeline_cycles: int = 0
+    drain_cycles: int = 0
 
     @property
     def mem_bytes(self) -> float:
         return self.weight_bytes + self.act_bytes
+
+    @property
+    def cycle_breakdown(self) -> Dict[str, int]:
+        return {
+            "stream": self.stream_cycles,
+            "fill": self.fill_cycles,
+            "pipeline": self.pipeline_cycles,
+            "drain": self.drain_cycles,
+        }
 
     def seconds(self, freq_hz: float) -> float:
         return self.cycles / freq_hz
@@ -129,6 +150,15 @@ def _simulate_workload(
     res.cycles = lat * rounds * w.layers
     kt_keep = (t.kt - skipped_kt) / t.kt if t.kt else 1.0
 
+    # ---- cycle breakdown (mirrors eq. 2 term by term) --------------------- #
+    passes = max(t.kt - skipped_kt, 0) * t.nt          # (KT, NT) tile passes
+    per_pass = pass_cycle_breakdown(cfg, t.mt)
+    scale = rounds * w.layers
+    res.stream_cycles = passes * per_pass.stream * scale
+    res.fill_cycles = passes * per_pass.fill * scale
+    res.pipeline_cycles = passes * per_pass.pipeline * scale
+    res.drain_cycles = per_pass.drain * scale
+
     # ---- stationary (weight / KV) traffic -------------------------------- #
     # Loaded once per tile; padded to full tile grid.  D-Legion multicasts
     # the stationary KV tiles across the kv_group query heads (SS IV-B).
@@ -177,6 +207,10 @@ def simulate(
         agg.weight_bytes += r.weight_bytes
         agg.act_bytes += r.act_bytes
         agg.psum_bytes += r.psum_bytes
+        agg.stream_cycles += r.stream_cycles
+        agg.fill_cycles += r.fill_cycles
+        agg.pipeline_cycles += r.pipeline_cycles
+        agg.drain_cycles += r.drain_cycles
     return SimReport(arch=cfg.name, freq_hz=cfg.freq_hz, stages=stages)
 
 

@@ -6,7 +6,15 @@ D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
 - runtime:  plan executor w/ psum-accumulator emulation + mode dispatch
 - modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
 - trace:    NoC-dedup traffic measurement + simulate() cross-validation
+- latency:  cycle counting (fill/stream/drain/prefetch) + eq.-2 cross-val
 """
+from repro.legion.latency import (
+    CycleBreakdown,
+    CycleCounter,
+    CycleValidation,
+    cross_validate_cycles,
+    total_cycle_error,
+)
 from repro.legion.modes import ModeSpec, select_mode
 from repro.legion.runtime import (
     ExecutionResult,
@@ -24,8 +32,9 @@ from repro.legion.trace import (
 )
 
 __all__ = [
-    "ExecutionResult", "ModeSpec", "PlanCoverageError", "StageValidation",
-    "TrafficTotals", "TrafficTracer", "cross_validate", "execute_plan",
-    "execute_workload", "select_mode", "synthesize_operands",
-    "validate_coverage",
+    "CycleBreakdown", "CycleCounter", "CycleValidation", "ExecutionResult",
+    "ModeSpec", "PlanCoverageError", "StageValidation", "TrafficTotals",
+    "TrafficTracer", "cross_validate", "cross_validate_cycles",
+    "execute_plan", "execute_workload", "select_mode",
+    "synthesize_operands", "total_cycle_error", "validate_coverage",
 ]

@@ -1,0 +1,231 @@
+"""Cycle model for the Legion runtime — counting the latency eq. (2) derives.
+
+``simulate()`` *derives* stage latency from closed-form tile counts
+(``unit_latency_cycles``, paper eq. 2).  This module *counts* it: while
+:func:`~repro.legion.runtime.execute_plan` runs a StagePlan, it reports every
+assignment's executed (K-window, N-tile) passes to a :class:`CycleCounter`,
+which spends cycles the way the ADiP-based Legion hardware would
+(arXiv:2510.10623's fill/drain/prefetch timing model):
+
+* **systolic fill** — each tile pass pays one ``D``-deep fill before results
+  stream out (the ``+1`` in ``D * (MT + 1)``; WS sync-FIFOs pay ``2D``);
+* **K-window streaming** — ``MT`` row-tiles of ``D`` cycles each stream the
+  activation rows through the array per pass;
+* **pipeline** — ``P`` extra stages per pass for ADiP's shared shifters /
+  accumulators;
+* **drain** — one ``D``-deep output drain per (legion, round) work chunk;
+* **weight prefetch** — the next stationary tile is fetched into the double
+  buffer *during* the current pass; only the exposed remainder
+  ``max(0, fetch_cycles - pass_cycles)`` stalls the array.  With the default
+  infinite fetch bandwidth prefetch is fully hidden — exactly eq. (2)'s
+  assumption — while a finite ``mem_bw_bytes_per_cycle`` makes the
+  bandwidth-bound regime measurable;
+* **ZTB** — fully-sparse windows never enter the array: no pass, no cycles
+  (the runtime simply does not report them as executed).
+
+Legions within a round run in parallel, so a round costs its slowest
+Legion; rounds serialize.  :func:`cross_validate_cycles` compares the summed
+count against ``SimReport`` per-stage cycles — the latency half of the
+falsifiability story (the traffic half lives in ``repro.legion.trace``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.analytical import pass_cycle_breakdown
+from repro.core.config import AcceleratorConfig
+from repro.core.simulator import simulate
+from repro.core.workloads import GEMMWorkload
+from repro.legion.trace import relative_error
+
+
+@dataclasses.dataclass
+class CycleBreakdown:
+    """Where one work chunk's cycles go (all integers, sums exactly)."""
+
+    stream: int = 0      # activation rows streaming through the array
+    fill: int = 0        # systolic fill per tile pass
+    pipeline: int = 0    # ADiP shared shifter/accumulator stages
+    drain: int = 0       # output drain per (legion, round) chunk
+    stall: int = 0       # exposed weight-prefetch cycles (finite bandwidth)
+
+    @property
+    def total(self) -> int:
+        return self.stream + self.fill + self.pipeline + self.drain \
+            + self.stall
+
+    def add(self, other: "CycleBreakdown") -> None:
+        self.stream += other.stream
+        self.fill += other.fill
+        self.pipeline += other.pipeline
+        self.drain += other.drain
+        self.stall += other.stall
+
+    def scaled(self, factor: int) -> "CycleBreakdown":
+        return CycleBreakdown(
+            stream=self.stream * factor, fill=self.fill * factor,
+            pipeline=self.pipeline * factor, drain=self.drain * factor,
+            stall=self.stall * factor,
+        )
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"stream": self.stream, "fill": self.fill,
+                "pipeline": self.pipeline, "drain": self.drain,
+                "stall": self.stall}
+
+
+class CycleCounter:
+    """Accumulates executed-pass cycle counts during ``execute_plan``.
+
+    The runtime calls :meth:`record_assignment` once per assignment with the
+    number of (K-window, N-tile) passes it actually executed (ZTB-skipped
+    windows excluded) and the stationary bytes those passes fetched.  The
+    counter derives per-pass cycles from the config's dataflow and folds the
+    parallel/serial structure: per (stage, round) the *slowest* Legion sets
+    the round's latency; rounds (and stages) serialize.
+    """
+
+    def __init__(self, cfg: AcceleratorConfig, *,
+                 mem_bw_bytes_per_cycle: float = math.inf) -> None:
+        if mem_bw_bytes_per_cycle <= 0:
+            raise ValueError(
+                "mem_bw_bytes_per_cycle must be > 0 (math.inf = prefetch "
+                f"fully hidden); got {mem_bw_bytes_per_cycle}"
+            )
+        self.cfg = cfg
+        self.mem_bw = mem_bw_bytes_per_cycle
+        # (stage, round) -> legion -> accumulated breakdown
+        self._cells: Dict[Tuple[str, int], Dict[int, CycleBreakdown]] = {}
+        self.executed_passes = 0
+        self.skipped_passes = 0       # ZTB fully-sparse windows never run
+
+    # ------------------------------------------------------------------ #
+    def record_assignment(
+        self, *, stage: str, round_: int, legion: int, m: int,
+        passes: int, skipped: int = 0, weight_bytes: float = 0.0,
+    ) -> None:
+        cfg = self.cfg
+        mt = max(math.ceil(m / cfg.d), 1)
+        per_pass = pass_cycle_breakdown(cfg, mt)
+        pass_c = per_pass.stream + per_pass.fill + per_pass.pipeline
+        stall = 0
+        if passes and self.mem_bw != math.inf:
+            # double-buffered prefetch: per pass only the fetch time that
+            # exceeds the pass's compute is exposed
+            fetch = (weight_bytes / passes) / self.mem_bw
+            stall = int(round(passes * max(0.0, fetch - pass_c)))
+        br = CycleBreakdown(
+            stream=passes * per_pass.stream, fill=passes * per_pass.fill,
+            pipeline=passes * per_pass.pipeline, drain=per_pass.drain,
+            stall=stall,
+        )
+        cell = self._cells.setdefault((stage, round_), {})
+        if legion in cell:
+            cell[legion].add(br)
+        else:
+            cell[legion] = br
+        self.executed_passes += passes
+        self.skipped_passes += skipped
+
+    # ------------------------------------------------------------------ #
+    def stage_breakdown(self) -> Dict[str, CycleBreakdown]:
+        """Per-stage breakdown of the critical (slowest-Legion) path."""
+        out: Dict[str, CycleBreakdown] = {}
+        for (stage, _rnd), legions in sorted(self._cells.items()):
+            crit = max(legions.values(), key=lambda b: b.total)
+            out.setdefault(stage, CycleBreakdown()).add(crit)
+        return out
+
+    def stage_cycles(self) -> Dict[str, int]:
+        return {s: b.total for s, b in self.stage_breakdown().items()}
+
+    @property
+    def total_cycles(self) -> int:
+        return sum(self.stage_cycles().values())
+
+
+# --------------------------------------------------------------------------- #
+# Cross-validation against the analytic simulator
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class CycleValidation:
+    """Measured (counted) vs analytic (eq. 2) cycles for one stage."""
+
+    stage: str
+    measured: int
+    analytic: int
+    rtol: float
+    measured_breakdown: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    analytic_breakdown: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def rel_err(self) -> float:
+        return relative_error(self.measured, self.analytic)
+
+    @property
+    def ok(self) -> bool:
+        return self.rel_err <= self.rtol
+
+    def __str__(self) -> str:
+        return (f"[{self.stage}] cycles measured={self.measured} vs "
+                f"analytic={self.analytic}: {self.rel_err * 100:.2f}% "
+                f"({'OK' if self.ok else 'MISMATCH'} @ rtol={self.rtol})")
+
+
+def cross_validate_cycles(
+    cfg: AcceleratorConfig,
+    workloads: Iterable[GEMMWorkload],
+    *,
+    rtol: float = 0.05,
+    seed: int = 0,
+    ztb_sparsity: float = 0.0,
+    check_outputs: bool = True,
+) -> List[CycleValidation]:
+    """Execute every workload through the legion runtime, counting cycles,
+    and compare per-stage totals against ``simulate()``'s latency model.
+
+    One layer of each workload executes numerically; counted cycles are
+    scaled by ``w.layers`` to match the simulator's whole-model accounting
+    (the same convention as ``trace.cross_validate``).  With
+    ``ztb_sparsity > 0`` both sides account the skipped fully-sparse
+    windows — the measured side by literally not running them.
+    """
+    from repro.legion.runtime import execute_workload
+
+    workloads = list(workloads)
+    ztb_stats = None
+    meas_br: Dict[str, CycleBreakdown] = {}
+    for w in workloads:
+        counter = CycleCounter(cfg)
+        res = execute_workload(
+            cfg, w, seed=seed,
+            ztb_sparsity=ztb_sparsity if w.weight_bits < 8 else 0.0,
+            check_outputs=check_outputs, cycles=counter,
+        )
+        if res.ztb_stats is not None and ztb_stats is None:
+            ztb_stats = res.ztb_stats
+        for stage, br in counter.stage_breakdown().items():
+            agg = meas_br.setdefault(stage, CycleBreakdown())
+            agg.add(br.scaled(w.layers))
+
+    report = simulate(cfg, workloads, ztb=ztb_stats)
+    out: List[CycleValidation] = []
+    for stage, br in meas_br.items():
+        sim = report.stages[stage]
+        out.append(CycleValidation(
+            stage=stage, measured=br.total, analytic=sim.cycles, rtol=rtol,
+            measured_breakdown=br.as_dict(),
+            analytic_breakdown=sim.cycle_breakdown,
+        ))
+    return out
+
+
+def total_cycle_error(validations: List[CycleValidation]) -> float:
+    """Relative error of the summed (whole-model) cycle count."""
+    return relative_error(sum(v.measured for v in validations),
+                          sum(v.analytic for v in validations))

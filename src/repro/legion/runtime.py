@@ -27,9 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (
+    TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union,
+)
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.legion.latency import CycleCounter
 
 from repro.core.config import AcceleratorConfig
 from repro.core.scheduler import StagePlan, plan_stage
@@ -47,13 +52,14 @@ class PlanCoverageError(ValueError):
 
 @dataclasses.dataclass
 class ExecutionResult:
-    """Outputs + measured traffic of one executed StagePlan."""
+    """Outputs + measured traffic (and cycles) of one executed StagePlan."""
 
     outputs: np.ndarray            # [count, M, N] int32 (or float32)
     trace: TrafficTracer
     mode: ModeSpec
     plan: StagePlan
     ztb_stats: Optional[ZTBStats] = None
+    cycles: Optional["CycleCounter"] = None   # repro.legion.latency counter
 
     @property
     def output(self) -> np.ndarray:
@@ -151,6 +157,7 @@ def execute_plan(
     mode: Optional[ModeSpec] = None,
     ztb: Union[None, bool, ZeroTileBook, Sequence[ZeroTileBook]] = None,
     tracer: Optional[TrafficTracer] = None,
+    cycles: Optional["CycleCounter"] = None,
     granularity: str = "window",
     kernel_backend: str = "reference",
     emulate_cores: bool = False,
@@ -169,6 +176,10 @@ def execute_plan(
       ztb: ``True`` builds ZeroTileBooks offline from ``w``'s actual zero
          blocks; or pass pre-built book(s).  Fully-sparse windows are
          skipped, partially-sparse windows gate cores.
+      cycles: optional :class:`~repro.legion.latency.CycleCounter`; every
+         executed (K-window, N-tile) pass is reported to it, so the counted
+         latency (fill/stream/drain/prefetch) is comparable to
+         ``simulate()``'s eq.-2 cycles (ZTB-skipped windows cost nothing).
       granularity: ``"window"`` runs the explicit psum-accumulator loop
          (one backend call per K-window, the paper's dataflow); ``"kernel"``
          issues one whole-slice kernel call per assignment (e.g. the Pallas
@@ -299,6 +310,9 @@ def execute_plan(
             tiles.append((j, lo, min(lo + n_tile, a.n_hi)))
             lo += n_tile
             j += 1
+        a_exec = 0           # executed (K-window, N-tile) passes
+        a_skip = 0           # ZTB fully-sparse windows skipped outright
+        a_wbytes = 0.0       # stationary bytes the passes fetched
 
         # Tiles are served by `banks` parallel accumulators: process them in
         # bank-sized groups (numerically associative — ordering only).
@@ -309,6 +323,7 @@ def execute_plan(
                 for i in range(k_tiles):
                     if wn is not None and gtile < wn.shape[1] \
                             and not wn[i, gtile]:
+                        a_skip += 1
                         continue          # fully-sparse window: skip outright
                     if granularity == "window":
                         if emulate_cores:
@@ -345,6 +360,14 @@ def execute_plan(
                     psum = (hi - lo) * m * 4.0
                     tracer.psum(psum if executed == 0 else 2.0 * psum)
                     executed += 1
+                    a_exec += 1
+                    a_wbytes += k_window * width * wbytes
+
+        if cycles is not None:
+            cycles.record_assignment(
+                stage=plan.stage, round_=a.round, legion=a.legion, m=m,
+                passes=a_exec, skipped=a_skip, weight_bytes=a_wbytes,
+            )
 
         if granularity == "kernel":
             res = kernel_call(xs, inst, a.n_lo, a.n_hi)
@@ -353,6 +376,7 @@ def execute_plan(
     return ExecutionResult(
         outputs=out, trace=tracer, mode=mode, plan=plan,
         ztb_stats=combined_ztb_stats(books) if books else None,
+        cycles=cycles,
     )
 
 
@@ -406,6 +430,8 @@ def execute_workload(
     granularity: str = "window",
     kernel_backend: str = "reference",
     emulate_cores: bool = False,
+    cycles: Optional["CycleCounter"] = None,
+    accumulators: Optional[int] = None,
 ) -> ExecutionResult:
     """Plan + synthesize + execute one workload (single layer).
 
@@ -422,7 +448,8 @@ def execute_workload(
         cfg, plan, x, weights,
         ztb=True if ztb_sparsity > 0.0 else None,
         granularity=granularity, kernel_backend=kernel_backend,
-        emulate_cores=emulate_cores,
+        emulate_cores=emulate_cores, cycles=cycles,
+        accumulators=accumulators,
     )
     if check_outputs:
         for inst in range(w.count):

@@ -36,6 +36,17 @@ from repro.core.simulator import simulate
 from repro.core.workloads import GEMMWorkload
 
 
+def relative_error(measured: float, analytic: float) -> float:
+    """|measured - analytic| / analytic, with 0-vs-0 counting as exact.
+
+    The single error metric of every runtime-vs-``simulate()``
+    cross-validation (traffic here, cycles in ``repro.legion.latency``).
+    """
+    if analytic == 0.0:
+        return 0.0 if measured == 0.0 else float("inf")
+    return abs(measured - analytic) / analytic
+
+
 @dataclasses.dataclass
 class TrafficTotals:
     weight_bytes: float = 0.0
@@ -107,20 +118,15 @@ class StageValidation:
     analytic: TrafficTotals
     rtol: float
 
-    def _rel(self, meas: float, ana: float) -> float:
-        if ana == 0.0:
-            return 0.0 if meas == 0.0 else float("inf")
-        return abs(meas - ana) / ana
-
     @property
     def errors(self) -> Dict[str, float]:
         return {
-            "weight": self._rel(self.measured.weight_bytes,
-                                self.analytic.weight_bytes),
-            "act": self._rel(self.measured.act_bytes,
-                             self.analytic.act_bytes),
-            "psum": self._rel(self.measured.psum_bytes,
-                              self.analytic.psum_bytes),
+            "weight": relative_error(self.measured.weight_bytes,
+                                     self.analytic.weight_bytes),
+            "act": relative_error(self.measured.act_bytes,
+                                  self.analytic.act_bytes),
+            "psum": relative_error(self.measured.psum_bytes,
+                                   self.analytic.psum_bytes),
         }
 
     @property

@@ -1,2 +1,5 @@
-"""Serving substrate: continuous-batching engine + cache planning."""
+"""Serving substrate: continuous-batching engine + cache planning +
+Legion accelerator backend (per-step projection GEMMs through the runtime).
+"""
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.legion_backend import LegionServeBackend

@@ -11,7 +11,7 @@ attention).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +73,16 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self.slots = [_Slot() for _ in range(max_slots)]
         self.cache = api.init_cache(max_slots, max_seq)
+        self._next_uid = 0
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        # Step observers: called after every prefill / batched decode with a
+        # small event dict — the hook accelerator backends attach to (e.g.
+        # repro.serve.legion_backend drives the projection GEMMs of each
+        # step through the Legion runtime for traffic/cycle tallies).
+        #   {"kind": "prefill", "uid": int, "tokens": prompt_len}
+        #   {"kind": "decode",  "uids": [int, ...], "tokens": 1}
+        self.step_observers: List[Callable[[dict], None]] = []
         self._decode = jax.jit(
             lambda params, tok, cache, pos: api.decode(params, tok, cache,
                                                        pos)
@@ -83,9 +91,13 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
-        req = Request(uid=len(self.queue) + len(self.finished),
+        # monotonic uid: len(queue)+len(finished) collides once requests sit
+        # in slots (neither queued nor finished), merging distinct requests
+        # wherever uid keys a map (e.g. legion_backend.per_request)
+        req = Request(uid=self._next_uid,
                       prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self._next_uid += 1
         self.queue.append(req)
         return req
 
@@ -109,6 +121,8 @@ class ServeEngine:
             req.output.append(int(tok[0]))
             slot.request = req
             slot.pos = plen
+            self._notify({"kind": "prefill", "uid": req.uid,
+                          "tokens": plen})
 
     def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
         if self.greedy:
@@ -120,6 +134,10 @@ class ServeEngine:
 
     def _active(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    def _notify(self, event: dict) -> None:
+        for fn in self.step_observers:
+            fn(event)
 
     # ------------------------------------------------------------------ #
     def step(self):
@@ -137,6 +155,8 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos)
         )
+        self._notify({"kind": "decode", "tokens": 1,
+                      "uids": [self.slots[i].request.uid for i in active]})
         next_tok = np.asarray(self._sample(logits[:, -1]))
         for i in active:
             slot = self.slots[i]

@@ -1,0 +1,376 @@
+"""Serve-path Legion backend — serving steps executed through the runtime.
+
+The serving engine runs whole-model jitted JAX steps; the accelerator models
+never saw them.  This bridge closes that gap the way TensorRT-LLM routes
+per-step projection GEMMs through an accelerator backend: it extracts the
+projection matrices (``wq/wk/wv/wo`` and the SwiGLU ``w1/w2/w3``) from the
+engine's params, lowers every prefill / decode step to scheduler
+:class:`~repro.core.scheduler.StagePlan`\\ s, and drives them through
+:func:`~repro.legion.runtime.execute_plan` — so traced serving traffic
+produces measured **byte and cycle tallies per request**, cross-validatable
+against ``simulate()`` on the very same workloads.
+
+One representative layer executes numerically (the weights are the engine's
+actual ternary-quantized matrices, re-extracted to int8); tallies scale by
+the model's layer count — the same one-layer-times-L convention as
+``repro.legion.trace.cross_validate``.  Activations are synthetic int8
+(the engine's real activations live inside the jitted graph), so the GEMMs
+are numerically real — every output is checked against the plain ``x @ w``
+reference — while the *shapes, weights, plans, traffic, and cycles* are the
+serving step's own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.config import AcceleratorConfig
+from repro.core.scheduler import plan_stage
+from repro.core.simulator import simulate
+from repro.core.workloads import (
+    GEMMWorkload,
+    HEAD_PER_UNIT,
+    N_PARTITION,
+    OUT_PROJ,
+    QKV_PROJ,
+)
+from repro.legion.latency import CycleCounter, CycleValidation
+from repro.legion.runtime import execute_plan
+from repro.legion.trace import StageValidation, TrafficTotals
+
+# Serve-side stage names beyond the paper's four attention stages: the
+# SwiGLU MLP projections are GEMMs too, and at decode they dominate bytes.
+MLP_UP = "mlp_up"        # w1 & w3: [d_model, d_ff], two instances, shared x
+MLP_DOWN = "mlp_down"    # w2:      [d_ff, d_model]
+
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionOp:
+    """One serve-step GEMM family: template workload + stationary weights.
+
+    ``workload.m`` is a placeholder (1); the backend replaces it with the
+    step's row count (1 per decode token, prompt length for prefill).
+    """
+
+    workload: GEMMWorkload
+    weights: np.ndarray          # [count, K, N] int8 (ternary)
+
+
+@dataclasses.dataclass
+class StageTally:
+    traffic: TrafficTotals
+    cycles: int = 0
+
+
+@dataclasses.dataclass
+class StepTally:
+    """Measured totals of one serving step (all layers) through the runtime."""
+
+    m: int                                # activation rows (tokens) executed
+    gemms: int = 0                        # GEMM workloads lowered
+    weight_bytes: float = 0.0
+    act_bytes: float = 0.0
+    psum_bytes: float = 0.0
+    cycles: int = 0
+    executed_passes: int = 0
+    skipped_passes: int = 0
+    stages: Dict[str, StageTally] = dataclasses.field(default_factory=dict)
+
+    @property
+    def mem_bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes
+
+    def seconds(self, freq_hz: float) -> float:
+        return self.cycles / freq_hz
+
+    def merge(self, other: "StepTally") -> None:
+        """Fold another step into this one (engine-level accumulation)."""
+        self.m += other.m
+        self.gemms += other.gemms
+        self.weight_bytes += other.weight_bytes
+        self.act_bytes += other.act_bytes
+        self.psum_bytes += other.psum_bytes
+        self.cycles += other.cycles
+        self.executed_passes += other.executed_passes
+        self.skipped_passes += other.skipped_passes
+        for stage, st in other.stages.items():
+            agg = self.stages.setdefault(
+                stage, StageTally(traffic=TrafficTotals()))
+            agg.traffic.add(st.traffic)
+            agg.cycles += st.cycles
+
+
+@dataclasses.dataclass
+class RequestTally:
+    """Per-request accumulation across the request's prefill + decode steps."""
+
+    uid: int
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    weight_bytes: float = 0.0
+    act_bytes: float = 0.0
+    psum_bytes: float = 0.0
+    cycles: int = 0
+
+    @property
+    def mem_bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes
+
+    def add(self, t: StepTally) -> None:
+        self.weight_bytes += t.weight_bytes
+        self.act_bytes += t.act_bytes
+        self.psum_bytes += t.psum_bytes
+        self.cycles += t.cycles
+
+
+def _ternary_int8(w) -> np.ndarray:
+    """Engine weights -> int8 ternary.  ``prepare_params`` serves values in
+    {-gamma, 0, +gamma}; re-quantizing recovers the exact {-1, 0, 1} grid."""
+    from repro.quant.bitnet import quantize_weight_ternary
+
+    q, _gamma = quantize_weight_ternary(np.asarray(w, np.float32))
+    return np.asarray(q, np.int8)
+
+
+def extract_projection_ops(
+    model_cfg, params, *, layer: int = 0,
+) -> List[ProjectionOp]:
+    """Pull one layer's projection GEMMs out of stacked serve params.
+
+    Returns the four serve-side GEMM families (qkv_proj, out_proj, mlp_up,
+    mlp_down) with per-instance stationary matrices — per produced head for
+    qkv (the scheduler's head-per-Legion unit of work), per SwiGLU branch
+    for mlp_up — and ``layers=model_cfg.layers`` so downstream accounting
+    scales one executed layer to the whole model.
+    """
+    blocks = params["blocks"]
+    if "attn" not in blocks or "mlp" not in blocks:
+        raise ValueError(
+            "legion serve backend needs a dense transformer (attn + mlp "
+            f"blocks); got block params {sorted(blocks)}"
+        )
+    if model_cfg.quantization != "bitnet":
+        # _ternary_int8 would collapse real-valued served weights to
+        # {-1, 0, 1} — tallies for a model the engine does not serve
+        raise ValueError(
+            "legion serve backend models ternary (BitNet) projections; "
+            f"got quantization={model_cfg.quantization!r}"
+        )
+    hd = model_cfg.head_dim_
+    heads, kv_heads = model_cfg.n_heads, model_cfg.kv_heads
+    d_model, d_ff, layers = model_cfg.d_model, model_cfg.d_ff, model_cfg.layers
+
+    attn = {k: _ternary_int8(blocks["attn"][k][layer])
+            for k in ("wq", "wk", "wv", "wo")}
+    mlp = {k: _ternary_int8(blocks["mlp"][k][layer])
+           for k in ("w1", "w2", "w3")}
+
+    def split_heads(w: np.ndarray, n: int) -> List[np.ndarray]:
+        return [w[:, h * hd:(h + 1) * hd] for h in range(n)]
+
+    qkv = np.stack(
+        split_heads(attn["wq"], heads)
+        + split_heads(attn["wk"], kv_heads)
+        + split_heads(attn["wv"], kv_heads)
+    )
+    bits = 2
+    return [
+        ProjectionOp(
+            GEMMWorkload(stage=QKV_PROJ, m=1, k=d_model, n=hd,
+                         weight_bits=bits, count=heads + 2 * kv_heads,
+                         shared_input=True, mapping=HEAD_PER_UNIT,
+                         layers=layers),
+            qkv,
+        ),
+        ProjectionOp(
+            GEMMWorkload(stage=OUT_PROJ, m=1, k=heads * hd, n=d_model,
+                         weight_bits=bits, count=1, mapping=N_PARTITION,
+                         layers=layers),
+            attn["wo"][None],
+        ),
+        ProjectionOp(
+            GEMMWorkload(stage=MLP_UP, m=1, k=d_model, n=d_ff,
+                         weight_bits=bits, count=2, shared_input=True,
+                         mapping=N_PARTITION, layers=layers),
+            np.stack([mlp["w1"], mlp["w3"]]),
+        ),
+        ProjectionOp(
+            GEMMWorkload(stage=MLP_DOWN, m=1, k=d_ff, n=d_model,
+                         weight_bits=bits, count=1, mapping=N_PARTITION,
+                         layers=layers),
+            mlp["w2"][None],
+        ),
+    ]
+
+
+class LegionServeBackend:
+    """Drives a ServeEngine's per-step projection GEMMs through the runtime.
+
+    Attach to an engine (``backend.attach(engine)``) and every prefill /
+    decode step is lowered to StagePlans and executed.  Two views
+    accumulate:
+
+    * :attr:`totals` — **batch-accurate** engine-level totals: a batched
+      decode over A active slots executes as one ``m=A`` step (stationary
+      weights fetched once for the whole batch, like the hardware would);
+    * :attr:`per_request` — per-request **standalone** costs: each decode
+      token is attributed its own ``m=1`` step, as if the request were
+      served alone.  Summing per-request tallies therefore *exceeds*
+      ``totals`` whenever requests share a decode batch — that headroom is
+      exactly the batching win, not double-counted hardware work.
+
+    Step executions are cached by row count ``m``: the weights are fixed,
+    so each distinct batch shape executes once.
+    """
+
+    def __init__(
+        self,
+        accel_cfg: AcceleratorConfig,
+        model_cfg,
+        params,
+        *,
+        layer: int = 0,
+        seed: int = 0,
+        check_outputs: bool = True,
+        mem_bw_bytes_per_cycle: float = math.inf,
+    ) -> None:
+        self.cfg = accel_cfg
+        self.model_cfg = model_cfg
+        self.ops = extract_projection_ops(model_cfg, params, layer=layer)
+        self.seed = seed
+        self.check_outputs = check_outputs
+        self.mem_bw = mem_bw_bytes_per_cycle
+        self.per_request: Dict[int, RequestTally] = {}
+        self.totals = StepTally(m=0)     # batch-accurate engine totals
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self._step_cache: Dict[int, StepTally] = {}
+
+    # ------------------------------------------------------------------ #
+    def attach(self, engine) -> "LegionServeBackend":
+        engine.step_observers.append(self.on_step)
+        return self
+
+    def on_step(self, event: dict) -> None:
+        if event["kind"] == PREFILL:
+            self.prefill_steps += 1
+            tally = self.step_tally(event["tokens"])
+            self.totals.merge(tally)
+            req = self._request(event["uid"])
+            req.prefill_tokens += event["tokens"]
+            req.add(tally)
+        elif event["kind"] == DECODE:
+            self.decode_steps += 1
+            # engine view: one batched m=len(uids) step
+            self.totals.merge(self.step_tally(len(event["uids"])))
+            # request view: each token's standalone m=1 cost
+            tally = self.step_tally(1)
+            for uid in event["uids"]:
+                req = self._request(uid)
+                req.decode_tokens += 1
+                req.add(tally)
+
+    def _request(self, uid: int) -> RequestTally:
+        return self.per_request.setdefault(uid, RequestTally(uid=uid))
+
+    # ------------------------------------------------------------------ #
+    def workloads(self, m: int) -> List[GEMMWorkload]:
+        return [dataclasses.replace(op.workload, m=m) for op in self.ops]
+
+    def step_tally(self, m: int) -> StepTally:
+        """Execute one serving step's GEMMs for ``m`` activation rows
+        (cached — weights are stationary across steps)."""
+        if m in self._step_cache:
+            return self._step_cache[m]
+        rng = np.random.default_rng(self.seed + m)
+        tally = StepTally(m=m)
+        for op in self.ops:
+            w = dataclasses.replace(op.workload, m=m)
+            plan = plan_stage(self.cfg, w)
+            x = rng.integers(-8, 9, size=(m, w.k)).astype(np.int8)
+            counter = CycleCounter(self.cfg,
+                                   mem_bw_bytes_per_cycle=self.mem_bw)
+            res = execute_plan(self.cfg, plan, x, op.weights, cycles=counter)
+            if self.check_outputs:
+                xi = x.astype(np.int64)
+                for inst in range(w.count):
+                    ref = xi @ op.weights[inst].astype(np.int64)
+                    if not np.array_equal(
+                            res.outputs[inst].astype(np.int64), ref):
+                        raise AssertionError(
+                            f"{w.stage}: serve-path runtime output != x @ w"
+                            f" reference (instance {inst})"
+                        )
+            cycles = counter.total_cycles * w.layers
+            traffic = res.trace.totals.scaled(w.layers)
+            tally.gemms += 1
+            tally.weight_bytes += traffic.weight_bytes
+            tally.act_bytes += traffic.act_bytes
+            tally.psum_bytes += traffic.psum_bytes
+            tally.cycles += cycles
+            tally.executed_passes += counter.executed_passes * w.layers
+            tally.skipped_passes += counter.skipped_passes * w.layers
+            agg = tally.stages.setdefault(
+                w.stage, StageTally(traffic=TrafficTotals()))
+            agg.traffic.add(traffic)
+            agg.cycles += cycles
+        self._step_cache[m] = tally
+        return tally
+
+    # ------------------------------------------------------------------ #
+    def cross_validate(
+        self, m: int = 1, *, rtol: float = 0.05,
+    ) -> Tuple[List[StageValidation], List[CycleValidation]]:
+        """Compare a step's measured tallies against ``simulate()`` on the
+        same extracted workloads — the serve-path falsifiability check."""
+        tally = self.step_tally(m)
+        report = simulate(self.cfg, self.workloads(m))
+        traffic_vals: List[StageValidation] = []
+        cycle_vals: List[CycleValidation] = []
+        for stage, st in tally.stages.items():
+            sim = report.stages[stage]
+            traffic_vals.append(StageValidation(
+                stage=stage, measured=st.traffic,
+                analytic=TrafficTotals(
+                    weight_bytes=sim.weight_bytes, act_bytes=sim.act_bytes,
+                    psum_bytes=sim.psum_bytes,
+                ),
+                rtol=rtol,
+            ))
+            cycle_vals.append(CycleValidation(
+                stage=stage, measured=st.cycles, analytic=sim.cycles,
+                rtol=rtol, analytic_breakdown=sim.cycle_breakdown,
+            ))
+        return traffic_vals, cycle_vals
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> Dict[str, float]:
+        """Batch-accurate engine totals (``self.totals``) + request counts.
+
+        ``cycles``/``*_bytes`` count each batched decode step once at its
+        true batch size — the hardware-level total, smaller than the sum of
+        the standalone per-request tallies whenever decode steps batched.
+        """
+        reqs = self.per_request.values()
+        decode_tokens = sum(r.decode_tokens for r in reqs)
+        decode_cycles = (self._step_cache[1].cycles
+                         if 1 in self._step_cache else 0)
+        return {
+            "requests": len(self.per_request),
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "prefill_tokens": sum(r.prefill_tokens for r in reqs),
+            "decode_tokens": decode_tokens,
+            "weight_bytes": self.totals.weight_bytes,
+            "act_bytes": self.totals.act_bytes,
+            "psum_bytes": self.totals.psum_bytes,
+            "cycles": self.totals.cycles,
+            "cycles_per_decode_token": decode_cycles,
+            "us_per_decode_token": decode_cycles / self.cfg.freq_hz * 1e6,
+        }

@@ -1,0 +1,185 @@
+"""Property sweep of the runtime mode matrix — execute_plan numerics.
+
+Two layers of coverage for the same invariant (every mode's output equals
+the dense ``x @ w`` reference bit-exactly, int32 accumulation):
+
+* a deterministic seeded sweep across the full W1.58 / W4 / W8 x {dense,
+  ZTB} matrix with randomized (M, K, N, count, cores, d, banks) — always
+  runs, so the matrix is exercised even without hypothesis installed;
+* hypothesis property tests that additionally randomize the geometry per
+  example (and shrink on failure) when hypothesis is available.
+
+Custom K-windows (k_window != C*D) and accumulator bank counts are part of
+the sweep: banks only reorder numerically-associative int32 adds, windows
+only change psum round structure — neither may change a single output bit.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.config import AcceleratorConfig, Dataflow
+from repro.core.scheduler import Assignment, StagePlan, plan_stage
+from repro.core.workloads import (
+    ATTN_SCORE,
+    HEAD_PER_UNIT,
+    N_PARTITION,
+    QKV_PROJ,
+    GEMMWorkload,
+)
+from repro.legion import (
+    CycleCounter,
+    execute_plan,
+    execute_workload,
+    synthesize_operands,
+)
+from repro.legion.modes import BITLINEAR, BLOCK_SPARSE, DENSE
+
+
+def _cfg(legions=2, cores=4, d=8) -> AcceleratorConfig:
+    return AcceleratorConfig(
+        name=f"t-{legions}L{cores}C{d}D", dataflow=Dataflow.ADIP,
+        units=legions, cores=cores, d=d, pipeline=4, adaptive=True,
+        packed_weights=True,
+    )
+
+
+def _reference(x, weights, count):
+    out = []
+    for i in range(count):
+        xi = (x if x.ndim == 2 else x[i]).astype(np.int64)
+        out.append(xi @ weights[i].astype(np.int64))
+    return np.stack(out)
+
+
+def _check_case(m, k, n, count, bits, ztb, legions, cores, d, mapping,
+                shared, banks, seed):
+    cfg = _cfg(legions, cores, d)
+    stage = QKV_PROJ if mapping == HEAD_PER_UNIT else ATTN_SCORE
+    w = GEMMWorkload(stage=stage, m=m, k=k, n=n, weight_bits=bits,
+                     count=count, shared_input=shared, mapping=mapping)
+    plan = plan_stage(cfg, w)
+    x, weights = synthesize_operands(
+        w, seed=seed, ztb_sparsity=0.5 if ztb else 0.0,
+        k_window=plan.assignments[0].k_window,
+    )
+    counter = CycleCounter(cfg)
+    res = execute_plan(cfg, plan, x, weights, ztb=True if ztb else None,
+                       accumulators=banks, cycles=counter)
+    ref = _reference(x, weights, count)
+    assert np.array_equal(res.outputs.astype(np.int64), ref), (
+        f"mode {res.mode.name} diverged from dense reference "
+        f"(m={m} k={k} n={n} count={count} banks={banks})"
+    )
+    expected = {2: BITLINEAR, 4: BITLINEAR, 8: DENSE}[bits]
+    assert res.mode.backend == (BLOCK_SPARSE if ztb else expected)
+    assert counter.total_cycles > 0
+    return res
+
+
+# --------------------------------------------------------------------------- #
+# Deterministic sweep (runs everywhere)
+# --------------------------------------------------------------------------- #
+
+MODE_MATRIX = [(bits, ztb) for bits in (2, 4, 8) for ztb in (False, True)]
+
+
+@pytest.mark.parametrize("bits,ztb", MODE_MATRIX)
+@pytest.mark.parametrize("case", range(4))
+def test_mode_matrix_matches_dense_reference(bits, ztb, case):
+    rng = np.random.default_rng(1000 * case + 10 * bits + ztb)
+    m = int(rng.integers(1, 49))
+    k = int(rng.integers(1, 321))
+    n = int(rng.integers(1, 161))
+    count = int(rng.integers(1, 7))
+    legions = int(rng.choice([1, 2, 8]))
+    cores, d = [(1, 8), (2, 8), (4, 8), (8, 16)][int(rng.integers(4))]
+    banks = int(rng.integers(1, 9))
+    mapping = HEAD_PER_UNIT if rng.integers(2) else N_PARTITION
+    shared = bool(rng.integers(2))
+    _check_case(m, k, n, count, bits, ztb, legions, int(cores), int(d),
+                mapping, shared, banks, seed=case)
+
+
+@pytest.mark.parametrize("k_window_tiles", [1, 2, 5])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_custom_k_window_matches_dense_reference(bits, k_window_tiles):
+    """Hand-built plans with k_window != C*D: psum round structure changes,
+    output bits must not."""
+    cfg = _cfg(legions=1, cores=4, d=8)
+    m, k, n = 16, 200, 48
+    k_window = 8 * k_window_tiles          # divisible by any packing factor
+    k_tiles = math.ceil(k / k_window)
+    plan = StagePlan(
+        stage="custom", mapping=HEAD_PER_UNIT, rounds=1, weight_bits=bits,
+        assignments=[Assignment(legion=0, round=0, instance=0, n_lo=0,
+                                n_hi=n, multicast_group=0, k_tiles=k_tiles,
+                                k_window=k_window)],
+    )
+    rng = np.random.default_rng(bits * 7 + k_window_tiles)
+    lohi = {2: (-1, 2), 4: (-8, 8), 8: (-8, 9)}[bits]
+    x = rng.integers(-8, 9, size=(m, k)).astype(np.int8)
+    w = rng.integers(*lohi, size=(1, k, n)).astype(np.int8)
+    res = execute_plan(cfg, plan, x, w)
+    ref = x.astype(np.int64) @ w[0].astype(np.int64)
+    assert np.array_equal(res.output.astype(np.int64), ref)
+
+
+# --------------------------------------------------------------------------- #
+# Hypothesis property tests (guarded import — the deterministic sweep above
+# must keep running when hypothesis is absent, so no module-level skip)
+# --------------------------------------------------------------------------- #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=20, deadline=None)
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 48),
+        k=st.integers(1, 320),
+        n=st.integers(1, 160),
+        count=st.integers(1, 6),
+        bits=st.sampled_from([2, 4, 8]),
+        ztb=st.booleans(),
+        legions=st.sampled_from([1, 2, 8]),
+        geometry=st.sampled_from([(1, 8), (2, 8), (4, 8), (8, 16)]),
+        banks=st.integers(1, 8),
+        mapping=st.sampled_from([HEAD_PER_UNIT, N_PARTITION]),
+        shared=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_execute_plan_equals_dense_reference(m, k, n, count, bits, ztb,
+                                                 legions, geometry, banks,
+                                                 mapping, shared, seed):
+        cores, d = geometry
+        _check_case(m, k, n, count, bits, ztb, legions, cores, d, mapping,
+                    shared, banks, seed)
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 32),
+        k=st.integers(1, 256),
+        n=st.integers(1, 96),
+        bits=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_bank_count_and_core_emulation_are_invariant(m, k, n, bits,
+                                                         seed):
+        """Accumulator banks and spatial core emulation reorder associative
+        int32 adds — every variant must produce identical bits."""
+        cfg = _cfg(legions=2, cores=2, d=8)
+        w = GEMMWorkload(stage=QKV_PROJ, m=m, k=k, n=n, weight_bits=bits,
+                         count=2, shared_input=True, mapping=HEAD_PER_UNIT)
+        base = execute_workload(cfg, w, seed=seed)
+        for banks in (1, 3, 8):
+            v = execute_workload(cfg, w, seed=seed, accumulators=banks)
+            assert np.array_equal(base.outputs, v.outputs)
+        emu = execute_workload(cfg, w, seed=seed, emulate_cores=True)
+        assert np.array_equal(base.outputs, emu.outputs)

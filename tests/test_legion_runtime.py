@@ -25,12 +25,15 @@ from repro.core.workloads import (
     bitnet_1_58b_kv,
 )
 from repro.legion import (
+    CycleCounter,
     PlanCoverageError,
     cross_validate,
+    cross_validate_cycles,
     execute_plan,
     execute_workload,
     select_mode,
     synthesize_operands,
+    total_cycle_error,
     validate_coverage,
 )
 from repro.legion.modes import BITLINEAR, BLOCK_SPARSE, DENSE
@@ -184,6 +187,81 @@ def test_coverage_error_detected():
         validate_coverage(broken, n=w.n, count=w.count)
 
 
+def test_undercovered_n_raises():
+    """A plan whose slices stop short of N must be rejected, by
+    validate_coverage directly and by execute_plan before running."""
+    w = _dense_w8()
+    plan = plan_stage(CFG, w)
+    full_n = max(a.n_hi for a in plan.assignments)
+    clipped = dataclasses.replace(
+        plan,
+        assignments=[
+            dataclasses.replace(a, n_hi=a.n_hi - 8)
+            if a.n_hi == full_n else a
+            for a in plan.assignments
+        ],
+    )
+    with pytest.raises(PlanCoverageError):
+        validate_coverage(clipped, n=w.n, count=w.count)
+    x, weights = synthesize_operands(w)
+    with pytest.raises(PlanCoverageError):
+        execute_plan(CFG, clipped, x, weights)
+
+
+def test_overlapping_slices_raise():
+    w = _dense_w8()
+    plan = plan_stage(CFG, w)
+    grown = dataclasses.replace(
+        plan,
+        assignments=[
+            dataclasses.replace(a, n_hi=a.n_hi + 4)
+            if a.n_lo == 0 else a
+            for a in plan.assignments
+        ],
+    )
+    with pytest.raises(PlanCoverageError, match="overlap"):
+        validate_coverage(grown, n=w.n, count=w.count)
+
+
+def test_k_not_divisible_by_window_pads_correctly():
+    """K=200 with a 128-element window: the padded tail contributes zeros,
+    outputs still equal the unpadded x @ w exactly."""
+    for bits in (2, 4, 8):
+        w = GEMMWorkload(stage=QKV_PROJ, m=16, k=200, n=96, weight_bits=bits,
+                         count=3, shared_input=True, mapping=HEAD_PER_UNIT)
+        plan = plan_stage(CFG, w)
+        a = plan.assignments[0]
+        assert a.k_window == CFG.cores * CFG.d
+        assert a.k_tiles == 2 and a.k_tiles * a.k_window > w.k
+        execute_workload(CFG, w)       # check_outputs asserts exactness
+
+
+def test_single_tile_stage_covers_and_matches():
+    """N smaller than one accumulator tile: a single (window, tile) pass per
+    assignment, coverage still exact."""
+    w = GEMMWorkload(stage=OUT_PROJ, m=8, k=64, n=16, weight_bits=8,
+                     count=1, mapping=N_PARTITION)
+    plan = plan_stage(CFG, w)
+    slices = validate_coverage(plan, n=w.n, count=1)
+    assert slices[0][0] == (0, 2)      # ceil(16/8 legions) = 2-wide slices
+    res = execute_workload(CFG, w)
+    assert res.outputs.shape == (1, 8, 16)
+
+
+# --------------------------------------------------------------------------- #
+# synthesize_operands determinism (reproducible cross-validation benchmarks)
+# --------------------------------------------------------------------------- #
+
+def test_synthesize_operands_deterministic_per_seed():
+    w = dataclasses.replace(_ternary_w2(), kv_group=2)
+    x1, w1 = synthesize_operands(w, seed=7, ztb_sparsity=0.25, k_window=128)
+    x2, w2 = synthesize_operands(w, seed=7, ztb_sparsity=0.25, k_window=128)
+    assert np.array_equal(x1, x2) and x1.dtype == x2.dtype
+    assert np.array_equal(w1, w2) and w1.dtype == w2.dtype
+    x3, w3 = synthesize_operands(w, seed=8, ztb_sparsity=0.25, k_window=128)
+    assert not (np.array_equal(x1, x3) and np.array_equal(w1, w3))
+
+
 def test_plan_k_tiling_annotation():
     plan = plan_stage(CFG, _ternary_w2())
     a = plan.assignments[0]
@@ -236,3 +314,60 @@ def test_traffic_matches_simulator_1_legion():
 def test_traffic_matches_simulator_with_ztb():
     _assert_traffic_matches(dlegion(legions=8), bitnet_1_58b(seq_len=128),
                             ztb_sparsity=0.25)
+
+
+# --------------------------------------------------------------------------- #
+# Cycle cross-validation against simulate() — the latency half of eq. (2)
+# --------------------------------------------------------------------------- #
+
+def _assert_cycles_match(cfg, spec, **kw):
+    wl = attention_workloads(dataclasses.replace(spec, layers=1))
+    validations = cross_validate_cycles(cfg, wl, rtol=0.05, **kw)
+    assert {v.stage for v in validations} == {
+        "qkv_proj", "attn_score", "attn_output", "out_proj",
+    }
+    for v in validations:
+        assert v.ok, str(v)
+        # decomposition agrees term by term with the simulator's breakdown
+        assert v.measured_breakdown["stream"] == \
+            v.analytic_breakdown["stream"], v.stage
+        assert v.measured_breakdown["drain"] == \
+            v.analytic_breakdown["drain"], v.stage
+        assert v.measured_breakdown["stall"] == 0       # prefetch hidden
+    assert total_cycle_error(validations) <= 0.05
+
+
+@pytest.mark.parametrize("legions", [1, 8])
+def test_cycles_match_simulator(legions):
+    _assert_cycles_match(dlegion(legions=legions),
+                         bitnet_1_58b_kv(seq_len=128))
+
+
+def test_cycles_match_simulator_with_ztb():
+    """ZTB-skipped windows shrink measured AND analytic cycles in step."""
+    cfg = dlegion(legions=8)
+    spec = bitnet_1_58b(seq_len=128)
+    _assert_cycles_match(cfg, spec, ztb_sparsity=0.25)
+    wl = attention_workloads(dataclasses.replace(spec, layers=1))
+    dense = cross_validate_cycles(cfg, wl)
+    sparse = cross_validate_cycles(cfg, wl, ztb_sparsity=0.25)
+    total = lambda vs: sum(v.measured for v in vs)
+    assert total(sparse) < total(dense)
+
+
+def test_prefetch_stalls_exposed_under_finite_bandwidth():
+    """eq. (2) assumes weight prefetch is fully hidden; with ~0 memory
+    bandwidth the double buffer cannot keep up and stalls appear."""
+    w = _ternary_w2()
+    hidden = CycleCounter(CFG)
+    execute_workload(CFG, w, cycles=hidden)
+    starved = CycleCounter(CFG, mem_bw_bytes_per_cycle=0.25)
+    execute_workload(CFG, w, cycles=starved)
+    assert sum(b.stall for b in hidden.stage_breakdown().values()) == 0
+    assert sum(b.stall for b in starved.stage_breakdown().values()) > 0
+    assert starved.total_cycles > hidden.total_cycles
+    # stalls never change numerics or traffic-side pass counts
+    assert starved.executed_passes == hidden.executed_passes
+    # bw <= 0 is rejected, not silently treated as infinite
+    with pytest.raises(ValueError, match="mem_bw"):
+        CycleCounter(CFG, mem_bw_bytes_per_cycle=0.0)
