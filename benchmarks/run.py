@@ -13,7 +13,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import dse, evaluation, kernel_bench, legion_runtime
+    from benchmarks import (
+        dse, evaluation, kernel_bench, legion_runtime, legion_sharded,
+    )
 
     which = set(sys.argv[1:])
 
@@ -30,6 +32,8 @@ def main() -> None:
         rows += kernel_bench.run()
     if want("legion") or want("runtime"):
         rows += legion_runtime.run()
+    if want("sharded"):
+        rows += legion_sharded.run()
     print(f"# {len(rows)} benchmark rows, all paper-headline asserts passed",
           file=sys.stderr)
 

@@ -6,10 +6,12 @@
 2. Run the packed-ternary bitlinear Pallas kernel (interpret mode).
 3. Build a ZTB from a block-sparse weight and run the sparse kernel.
 4. One QAT train step + one serving step of a tiny BitNet model.
-5. Execute one attention stage through the legion runtime and cross-check
-   its measured traffic against the simulator.
+5. Execute one attention stage through a `legion.Machine` session and
+   cross-check its measured traffic against the simulator.
 6. Drive one serving decode step's projection GEMMs through the serve-path
    Legion backend — per-token bytes AND cycles, cross-validated.
+7. The Machine session API: one-liner runs, custom instruments, and the
+   sharded executor backend (Legions on a JAX mesh axis, bit-exact).
 """
 import numpy as np
 import jax
@@ -88,16 +90,18 @@ logits, cache = api.decode(params, jnp.array([tok]), cache, jnp.int32(64))
 print(f"   served (ternary weights): first sampled token={tok}")
 
 print("=" * 70)
-print("5. Legion runtime — one attention stage executed through the plan")
+print("5. Legion Machine — one attention stage executed through the plan")
 import dataclasses
 
 from repro.core.workloads import attention_workloads as _wl, bitnet_1_58b_kv
-from repro.legion import execute_workload
+from repro.legion import Machine
 
 spec = dataclasses.replace(bitnet_1_58b_kv(seq_len=128), layers=1)
 score = _wl(spec)[1]          # Q @ K^T per head, int8, GQA KV multicast
 cfg_leg = dlegion()
-res = execute_workload(cfg_leg, score)   # asserts outputs == x @ w exactly
+machine = Machine(cfg_leg)
+res = machine.run(score)      # plan + synthesize + execute + validate
+assert res.ok                 # traffic AND cycles within 5% of simulate()
 tot, sim = res.trace.totals, simulate(cfg_leg, [score]).stages[score.stage]
 print(f"   {score.stage}: {score.count} heads on {cfg_leg.units} Legions, "
       f"mode={res.mode.name}, outputs={res.outputs.shape} == x @ w: OK")
@@ -108,7 +112,7 @@ print(f"   analytic  weight={sim.weight_bytes / 1e6:6.3f} MB  "
 print(f"   NoC multicast deduped {res.trace.multicast_hits} tile transfers")
 
 print("=" * 70)
-print("6. Serve-path Legion backend — one decode step through execute_plan")
+print("6. Serve-path Legion backend — one decode step through the Machine")
 from repro.serve.legion_backend import LegionServeBackend
 
 backend = LegionServeBackend(cfg_leg, cfg, params)   # SS4's served weights
@@ -124,4 +128,39 @@ print(f"   per decode token: {tally.cycles} cycles "
 worst = max(v.rel_err for v in cvals)
 print(f"   measured vs simulate() on the same workloads: "
       f"worst cycle error {worst * 100:.2f}% — serve path cross-validated")
+
+print("=" * 70)
+print("7. Machine session API — instruments + executor backends")
+from repro.legion import Instrument, ShardedExecutor
+
+
+class PassCounter(Instrument):
+    """Custom instrument: count executed vs ZTB-skipped passes."""
+
+    def __init__(self):
+        self.executed = 0
+        self.skipped = 0
+
+    def on_pass(self, **event):
+        self.executed += 1
+
+    def on_window_skip(self, **event):
+        self.skipped += 1
+
+
+probe = PassCounter()
+machine = Machine(cfg_leg, instruments=[probe])   # session-lifetime hook
+rep = machine.run(score)                          # fresh tracer+counter/run
+print(f"   instrument saw {probe.executed} executed passes; report merges "
+      f"weight={rep.traffic.weight_bytes / 1e6:.3f} MB, "
+      f"{rep.total_cycles} cycles, validation ok={rep.ok}")
+
+sharded = Machine(cfg_leg, backend=ShardedExecutor())
+rep_sh = sharded.run(score)   # Legion axis on a JAX mesh axis (shard_map)
+assert np.array_equal(rep.outputs, rep_sh.outputs)   # bit-exact parity
+assert rep_sh.trace.totals == rep.trace.totals
+print(f"   ShardedExecutor on {sharded.backend.devices_used} device(s): "
+      f"outputs bit-exact, traffic/cycles identical "
+      f"(run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to "
+      f"spread 8 Legions)")
 print("quickstart complete.")

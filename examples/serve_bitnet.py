@@ -31,6 +31,10 @@ def main():
                     help="skip the D-Legion serve backend tallies")
     ap.add_argument("--legions", type=int, default=8,
                     help="Legion count for the accelerator model")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run step GEMMs through the ShardedExecutor "
+                         "(Legion axis on a JAX mesh axis; set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 first)")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced
@@ -52,12 +56,16 @@ def main():
     backend = None
     if not args.no_legion:
         from repro.core import dlegion
+        from repro.legion import ShardedExecutor
         from repro.serve import LegionServeBackend
 
         accel = dlegion(legions=args.legions)
-        backend = LegionServeBackend(accel, cfg, params).attach(eng)
+        executor = ShardedExecutor() if args.sharded else None
+        backend = LegionServeBackend(accel, cfg, params,
+                                     executor=executor).attach(eng)
         print(f"legion backend attached: {accel.name}, projection GEMMs of "
-              f"every step run through execute_plan")
+              f"every step run through a Machine session "
+              f"({backend.machine.backend.name} executor)")
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

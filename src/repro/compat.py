@@ -14,6 +14,15 @@ import inspect
 import jax
 
 
+def on_tpu() -> bool:
+    """True when the default JAX backend is TPU.
+
+    The single home of the kernel packages' auto-dispatch check
+    (``backend="auto"`` -> Pallas on TPU, jnp reference elsewhere).
+    """
+    return jax.default_backend() == "tpu"
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
               axis_names=None):
     """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
@@ -40,13 +49,28 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
     )
 
 
-def make_mesh(axis_shapes, axis_names):
-    """``jax.make_mesh`` with explicit-auto axis types where supported."""
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with explicit-auto axis types where supported.
+
+    ``devices`` restricts the mesh to a subset (e.g. the first N of
+    ``jax.devices()`` when a plan has fewer Legions than the host has
+    devices); older ``jax.make_mesh`` without the parameter falls back to a
+    direct ``Mesh`` construction.
+    """
+    params = inspect.signature(jax.make_mesh).parameters
     kwargs = {}
-    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+    if "axis_types" in params:
         axis_type = getattr(jax.sharding, "AxisType", None)
         if axis_type is not None:
             kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    if devices is not None:
+        if "devices" not in params:
+            import numpy as np
+            return jax.sharding.Mesh(
+                np.asarray(devices).reshape(tuple(axis_shapes)),
+                tuple(axis_names),
+            )
+        kwargs["devices"] = tuple(devices)
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
 
 

@@ -34,8 +34,8 @@ from repro.compat import abstract_mesh  # re-export: device-free rule meshes
 
 __all__ = [
     "Rules", "abstract_mesh", "active_rules", "constrain",
-    "constrain_layer_params", "make_rules", "param_shardings",
-    "spec_for_path", "use_rules",
+    "constrain_layer_params", "legion_rules", "make_rules",
+    "param_shardings", "spec_for_path", "use_rules",
 ]
 
 
@@ -92,6 +92,31 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, rules.spec(*logical))
     )
+
+
+# --------------------------------------------------------------------------- #
+# Legion-axis rules (Machine's ShardedExecutor)
+# --------------------------------------------------------------------------- #
+
+def legion_rules(mesh: Mesh, *, axis: str = "legion") -> Rules:
+    """Rule table for Legion-parallel plan execution.
+
+    The runtime mirror of the paper's orchestrator mapping: a StagePlan's
+    **legion** axis lands on a mesh axis (a Legion ≙ one device shard, the
+    same correspondence ``make_rules`` draws for heads -> "model"), while
+    every other runtime tensor axis — the round slot within a Legion, the
+    streamed M rows, the K reduction, the N columns — stays local to the
+    device.  ``repro.legion.machine.ShardedExecutor`` builds its shard_map
+    PartitionSpecs from this table.
+    """
+    table: Dict[str, Optional[object]] = {
+        "legion": axis if axis in mesh.axis_names else None,
+        "round": None,
+        "m": None,
+        "k": None,
+        "n": None,
+    }
+    return Rules(mesh, table)
 
 
 # --------------------------------------------------------------------------- #

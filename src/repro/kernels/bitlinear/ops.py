@@ -11,12 +11,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import on_tpu as _on_tpu
 from repro.kernels.bitlinear.kernel import bitlinear_matmul as _pallas_matmul
 from repro.kernels.bitlinear.ref import bitlinear_matmul_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def bitlinear_matmul(
@@ -56,6 +53,8 @@ def tile_gemm(
     Pallas path runs the whole tile as a single grid cell so the MXU block
     divisibility constraints never bite on runtime-sized windows.
     """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "reference"
     if backend == "pallas":
         m, k = x_int8.shape
         n = w_packed.shape[1]

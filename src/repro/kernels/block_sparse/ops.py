@@ -1,10 +1,10 @@
 """Public wrapper: builds the ZTB schedule and dispatches kernel/reference."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import on_tpu
 from repro.core.sparsity import csr_block_schedule
 from repro.kernels.block_sparse.kernel import block_sparse_matmul
 from repro.kernels.block_sparse.ref import block_sparse_matmul_ref
@@ -27,10 +27,10 @@ def ztb_matmul(
     of shape [K//bk, N//bn].
     """
     if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "reference"
+        backend = "pallas" if on_tpu() else "reference"
     if backend == "pallas":
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = not on_tpu()
         indices, counts = csr_block_schedule(block_nonzero)
         # Trim the schedule to the densest column — fully-sparse windows
         # beyond it never even appear in the grid.
@@ -66,6 +66,10 @@ def tile_gemm(
     semantics are unchanged, only skip granularity.
     """
     k, n = w.shape
+    if backend == "auto":
+        # resolve here (not in ztb_matmul) so the pallas shape fallbacks
+        # below apply to the auto-dispatched path too
+        backend = "pallas" if on_tpu() else "reference"
     if block_nonzero is not None:
         # fold the mask into w at the mask's own block granularity; blocks
         # are then re-derived from w's zeros below, the single source of

@@ -3,7 +3,11 @@
 The subsystem that closes the loop between the repo's three models of
 D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
 
-- runtime:  plan executor w/ psum-accumulator emulation + mode dispatch
+- machine:  `Machine` session facade — pluggable `Instrument` measurement
+            hooks + `ExecutorBackend` numerics (in-process or sharded
+            device-parallel over a JAX mesh axis)
+- runtime:  plan coverage validation, operand synthesis, deprecated
+            `execute_plan`/`execute_workload` shims
 - modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
 - trace:    NoC-dedup traffic measurement + simulate() cross-validation
 - latency:  cycle counting (fill/stream/drain/prefetch) + eq.-2 cross-val
@@ -14,6 +18,18 @@ from repro.legion.latency import (
     CycleValidation,
     cross_validate_cycles,
     total_cycle_error,
+)
+from repro.legion.machine import (
+    ExecContext,
+    ExecutorBackend,
+    InProcessExecutor,
+    Instrument,
+    Machine,
+    RunReport,
+    ShardedExecutor,
+    prepare_context,
+    run_assignment_loop,
+    validate_options,
 )
 from repro.legion.modes import ModeSpec, select_mode
 from repro.legion.runtime import (
@@ -32,9 +48,31 @@ from repro.legion.trace import (
 )
 
 __all__ = [
-    "CycleBreakdown", "CycleCounter", "CycleValidation", "ExecutionResult",
-    "ModeSpec", "PlanCoverageError", "StageValidation", "TrafficTotals",
-    "TrafficTracer", "cross_validate", "cross_validate_cycles",
-    "execute_plan", "execute_workload", "select_mode",
-    "synthesize_operands", "total_cycle_error", "validate_coverage",
+    "CycleBreakdown",
+    "CycleCounter",
+    "CycleValidation",
+    "ExecContext",
+    "ExecutionResult",
+    "ExecutorBackend",
+    "InProcessExecutor",
+    "Instrument",
+    "Machine",
+    "ModeSpec",
+    "PlanCoverageError",
+    "RunReport",
+    "ShardedExecutor",
+    "StageValidation",
+    "TrafficTotals",
+    "TrafficTracer",
+    "cross_validate",
+    "cross_validate_cycles",
+    "execute_plan",
+    "execute_workload",
+    "prepare_context",
+    "run_assignment_loop",
+    "select_mode",
+    "synthesize_operands",
+    "total_cycle_error",
+    "validate_coverage",
+    "validate_options",
 ]

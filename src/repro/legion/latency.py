@@ -36,7 +36,6 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.analytical import pass_cycle_breakdown
 from repro.core.config import AcceleratorConfig
-from repro.core.simulator import simulate
 from repro.core.workloads import GEMMWorkload
 from repro.legion.trace import relative_error
 
@@ -85,6 +84,10 @@ class CycleCounter:
     counter derives per-pass cycles from the config's dataflow and folds the
     parallel/serial structure: per (stage, round) the *slowest* Legion sets
     the round's latency; rounds (and stages) serialize.
+
+    Implements the :class:`~repro.legion.machine.Instrument` protocol via
+    :meth:`on_assignment_end`, so a counter registers directly on a
+    ``Machine`` (``Machine.run`` attaches a fresh one per run by default).
     """
 
     def __init__(self, cfg: AcceleratorConfig, *,
@@ -128,6 +131,16 @@ class CycleCounter:
             cell[legion] = br
         self.executed_passes += passes
         self.skipped_passes += skipped
+
+    # ---- Instrument protocol (repro.legion.machine) ------------------- #
+    def on_assignment_end(self, *, stage: str, round_: int, legion: int,
+                          instance: int, m: int, passes: int, skipped: int,
+                          weight_bytes: float) -> None:
+        del instance  # cycles fold by (stage, round, legion), not instance
+        self.record_assignment(
+            stage=stage, round_=round_, legion=legion, m=m, passes=passes,
+            skipped=skipped, weight_bytes=weight_bytes,
+        )
 
     # ------------------------------------------------------------------ #
     def stage_breakdown(self) -> Dict[str, CycleBreakdown]:
@@ -194,35 +207,17 @@ def cross_validate_cycles(
     (the same convention as ``trace.cross_validate``).  With
     ``ztb_sparsity > 0`` both sides account the skipped fully-sparse
     windows — the measured side by literally not running them.
+
+    Thin wrapper over :meth:`repro.legion.machine.Machine.cross_validate`
+    (which measures traffic and cycles in a single execution pass).
     """
-    from repro.legion.runtime import execute_workload
+    from repro.legion.machine import Machine
 
-    workloads = list(workloads)
-    ztb_stats = None
-    meas_br: Dict[str, CycleBreakdown] = {}
-    for w in workloads:
-        counter = CycleCounter(cfg)
-        res = execute_workload(
-            cfg, w, seed=seed,
-            ztb_sparsity=ztb_sparsity if w.weight_bits < 8 else 0.0,
-            check_outputs=check_outputs, cycles=counter,
-        )
-        if res.ztb_stats is not None and ztb_stats is None:
-            ztb_stats = res.ztb_stats
-        for stage, br in counter.stage_breakdown().items():
-            agg = meas_br.setdefault(stage, CycleBreakdown())
-            agg.add(br.scaled(w.layers))
-
-    report = simulate(cfg, workloads, ztb=ztb_stats)
-    out: List[CycleValidation] = []
-    for stage, br in meas_br.items():
-        sim = report.stages[stage]
-        out.append(CycleValidation(
-            stage=stage, measured=br.total, analytic=sim.cycles, rtol=rtol,
-            measured_breakdown=br.as_dict(),
-            analytic_breakdown=sim.cycle_breakdown,
-        ))
-    return out
+    _traffic_vals, cycle_vals = Machine(cfg).cross_validate(
+        workloads, rtol=rtol, seed=seed, ztb_sparsity=ztb_sparsity,
+        check_outputs=check_outputs,
+    )
+    return cycle_vals
 
 
 def total_cycle_error(validations: List[CycleValidation]) -> float:

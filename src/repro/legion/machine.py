@@ -1,0 +1,961 @@
+"""`Machine` — the Legion runtime as a session facade (API redesign).
+
+The paper's D-Legion is *one machine* with swappable concerns: precision
+modes, psum accumulators, NoC multicast, Legion-level parallelism.  The repo
+used to expose it as disconnected functions — ``execute_plan`` with eight
+keyword options, hand-threaded ``TrafficTracer``/``CycleCounter`` objects at
+every call site.  This module replaces that with a session object and two
+protocols, in the style of serving engines that separate scheduling from
+execution backends (vLLM's executor abstraction; TPUv4i's software-visible
+core grouping):
+
+* :class:`Instrument` — per-pass / per-fetch event hooks.
+  :class:`~repro.legion.trace.TrafficTracer` and
+  :class:`~repro.legion.latency.CycleCounter` implement it; registering an
+  instrument replaces the old ``tracer=``/``cycles=`` kwarg threading.
+  Per executed (K-window, N-tile) pass the event order is fixed and
+  documented (see :class:`Instrument`), so third-party instruments have a
+  spec to code against.
+
+* :class:`ExecutorBackend` — owns the numerics of a prepared plan.
+  :class:`InProcessExecutor` runs the classic window/kernel loop;
+  :class:`ShardedExecutor` maps the **Legion axis** of a
+  :class:`~repro.core.scheduler.StagePlan` onto a JAX mesh axis
+  (``repro.compat.shard_map`` + ``repro.distributed.sharding`` rules) and
+  executes rounds device-parallel, bit-exactly matching the in-process
+  results (int32 accumulation is associative, and ZTB-gated windows are
+  zeroed before shipping).
+
+``Machine(cfg).run(plan_or_workload)`` returns a :class:`RunReport` merging
+outputs, measured bytes, counted cycles, and (for workload runs) the
+per-stage validation against ``simulate()`` — one object instead of four
+hand-wired ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.config import AcceleratorConfig
+from repro.core.scheduler import Assignment, StagePlan, plan_stage
+from repro.core.simulator import simulate
+from repro.core.sparsity import ZeroTileBook, ZTBStats
+from repro.core.workloads import GEMMWorkload, N_PARTITION
+from repro.kernels import dense_tile_gemm
+from repro.legion.latency import CycleBreakdown, CycleCounter, CycleValidation
+from repro.legion.modes import (
+    BITLINEAR,
+    BLOCK_SPARSE,
+    ModeSpec,
+    select_mode,
+)
+from repro.legion.trace import StageValidation, TrafficTotals, TrafficTracer
+from repro.quant.packing import pack_2bit_kmajor, pack_4bit_kmajor
+
+GRANULARITIES = ("window", "kernel")
+# "auto" = the kernels' own dispatch (Pallas on TPU, reference elsewhere)
+KERNEL_BACKENDS = ("auto", "reference", "pallas")
+
+
+def validate_options(
+    *,
+    granularity: str = "window",
+    kernel_backend: str = "reference",
+    accumulators: Optional[int] = None,
+) -> None:
+    """Reject nonsensical execution options with clear messages.
+
+    The single validation boundary for options the old ``execute_plan``
+    silently accepted (``accumulators<=0`` produced empty bank groups — no
+    compute, silently wrong outputs; unknown ``kernel_backend`` strings fell
+    through to the kernels' default dispatch).
+    """
+    if granularity not in GRANULARITIES:
+        raise ValueError(
+            f"granularity={granularity!r}: expected one of {GRANULARITIES}"
+        )
+    if kernel_backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"kernel_backend={kernel_backend!r}: expected one of "
+            f"{KERNEL_BACKENDS}"
+        )
+    if accumulators is not None:
+        if isinstance(accumulators, bool) \
+                or not isinstance(accumulators, (int, np.integer)) \
+                or accumulators <= 0:
+            raise ValueError(
+                "accumulators must be a positive int (parallel psum banks) "
+                f"or None for the config default; got {accumulators!r}"
+            )
+
+
+# --------------------------------------------------------------------------- #
+# Instrument protocol
+# --------------------------------------------------------------------------- #
+
+class Instrument:
+    """Event hooks a plan execution fires, in a fixed documented order.
+
+    Per run: ``on_plan_begin`` once, then per assignment (sorted by
+    (round, legion)) and per (K-window, N-tile) pass either
+
+    * ``on_window_skip`` — the window is ZTB fully-sparse: no fetch, no
+      psum round, no compute; or
+    * ``on_weight_fetch`` -> ``on_act_stream`` -> ``on_psum`` ->
+      ``on_pass`` — one executed pass (the tracer deduplicates repeated
+      fetch keys itself; every event fires regardless),
+
+    then ``on_assignment_end`` once per assignment, and ``on_plan_end``
+    once.  Subclass and override what you need — every hook is a no-op —
+    or duck-type: missing hooks are skipped.
+    """
+
+    def on_plan_begin(self, plan: StagePlan, mode: ModeSpec,
+                      ctx: "ExecContext") -> None:
+        """A prepared plan is about to execute."""
+
+    def on_weight_fetch(self, key: Hashable, nbytes: float) -> None:
+        """A stationary tile moves (key identifies the physical transfer)."""
+
+    def on_act_stream(self, key: Hashable, nbytes: float) -> None:
+        """An activation stream pass moves (key = broadcast identity)."""
+
+    def on_psum(self, nbytes: float) -> None:
+        """Psum bank traffic for one pass (write, or read-modify-write)."""
+
+    def on_pass(self, *, stage: str, round_: int, legion: int, instance: int,
+                k_tile: int, n_lo: int, n_hi: int) -> None:
+        """One (K-window, N-tile) pass executed."""
+
+    def on_window_skip(self, *, stage: str, round_: int, legion: int,
+                       instance: int, k_tile: int, n_lo: int,
+                       n_hi: int) -> None:
+        """A ZTB fully-sparse window was skipped outright."""
+
+    def on_assignment_end(self, *, stage: str, round_: int, legion: int,
+                          instance: int, m: int, passes: int, skipped: int,
+                          weight_bytes: float) -> None:
+        """An assignment finished (CycleCounter's accounting granularity)."""
+
+    def on_plan_end(self, outputs: np.ndarray) -> None:
+        """The plan's outputs are final."""
+
+
+def _each(instruments: Sequence[object], hook: str, *args, **kwargs) -> None:
+    for ins in instruments:
+        fn = getattr(ins, hook, None)
+        if fn is not None:
+            fn(*args, **kwargs)
+
+
+# --------------------------------------------------------------------------- #
+# Prepared execution context (operand prep shared by every backend)
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class ExecContext:
+    """One plan's operands + geometry, prepared once, executed by a backend."""
+
+    cfg: AcceleratorConfig
+    plan: StagePlan
+    mode: ModeSpec
+    x_pad: np.ndarray
+    w_pad: np.ndarray
+    count: int
+    m: int
+    k: int
+    n: int
+    k_window: int
+    k_tiles: int
+    n_tile: int
+    int_path: bool
+    banks: int
+    granularity: str
+    kernel_backend: str
+    emulate_cores: bool
+    multicast: bool
+    broadcast_stream: bool
+    clip_weight_tiles: bool
+    wbytes: float
+    abytes: float
+    books: Optional[List[ZeroTileBook]] = None
+    packed: Optional[List[np.ndarray]] = None
+
+    @property
+    def out_dtype(self):
+        return np.int32 if self.int_path else np.float32
+
+    def ztb_stats(self) -> Optional[ZTBStats]:
+        from repro.legion.runtime import combined_ztb_stats
+        return combined_ztb_stats(self.books) if self.books else None
+
+    def tiles_for(self, a: Assignment) -> List[Tuple[int, int, int]]:
+        """(slot j, n_lo, n_hi) accumulator tiles of one assignment."""
+        tiles, lo, j = [], a.n_lo, 0
+        while lo < a.n_hi:
+            tiles.append((j, lo, min(lo + self.n_tile, a.n_hi)))
+            lo += self.n_tile
+            j += 1
+        return tiles
+
+    def window_skipped(self, book: Optional[ZeroTileBook], k_tile: int,
+                       gtile: int) -> bool:
+        if book is None:
+            return False
+        wn = book.window_nonzero
+        return gtile < wn.shape[1] and not wn[k_tile, gtile]
+
+
+def prepare_context(
+    cfg: AcceleratorConfig,
+    plan: StagePlan,
+    x: np.ndarray,
+    w: np.ndarray,
+    *,
+    mode: Optional[ModeSpec] = None,
+    ztb: Union[None, bool, ZeroTileBook, Sequence[ZeroTileBook]] = None,
+    granularity: str = "window",
+    kernel_backend: str = "reference",
+    emulate_cores: bool = False,
+    accumulators: Optional[int] = None,
+) -> ExecContext:
+    """Validate a plan + operands and prepare everything backends share:
+    K-padding, ZTB books, sub-byte packing, traffic geometry."""
+    from repro.legion.runtime import (
+        _build_books, _instance_view, _pad_axis, validate_coverage,
+    )
+
+    validate_options(granularity=granularity, kernel_backend=kernel_backend,
+                     accumulators=accumulators)
+    x = np.asarray(x)
+    w = np.asarray(w)
+    if not plan.assignments:
+        raise ValueError(f"plan {plan.stage!r} has no assignments")
+    count = max(a.instance for a in plan.assignments) + 1
+    m, k = x.shape[-2], x.shape[-1]
+    n = w.shape[-1]
+    if w.shape[-2] != k:
+        raise ValueError(f"x K={k} vs w K={w.shape[-2]}")
+    validate_coverage(plan, n=n, count=count)
+
+    if mode is None:
+        mode = select_mode(cfg, plan.weight_bits,
+                           sparse=ztb not in (None, False))
+
+    a0 = plan.assignments[0]
+    k_window = a0.k_window or cfg.cores * cfg.d
+    k_tiles = a0.k_tiles if a0.k_window else max(math.ceil(k / k_window), 1)
+    k_pad = k_tiles * k_window
+    n_tile = mode.n_tile(cfg.d)
+
+    x_pad = _pad_axis(x, x.ndim - 1, k_pad)
+    w_pad = _pad_axis(w, w.ndim - 2, k_pad)
+
+    books: Optional[List[ZeroTileBook]] = None
+    if ztb is True:
+        books = _build_books(w_pad, count, cfg, mode)
+    elif isinstance(ztb, ZeroTileBook):
+        books = [ztb] * count
+    elif ztb not in (None, False):
+        books = list(ztb)
+        if len(books) != count:
+            raise ValueError(f"{len(books)} books for {count} instances")
+
+    packed: Optional[List[np.ndarray]] = None
+    if mode.backend == BITLINEAR:
+        factor = 8 // mode.weight_bits
+        if k_window % factor or cfg.d % factor:
+            raise ValueError(
+                f"K window {k_window} / D {cfg.d} not divisible by packing "
+                f"factor {factor}"
+            )
+        pack = pack_2bit_kmajor if mode.weight_bits == 2 else pack_4bit_kmajor
+        packed = [
+            np.asarray(pack(_instance_view(w_pad, i, 2).astype(np.int8)))
+            for i in range(count)
+        ]
+
+    int_path = (np.issubdtype(x.dtype, np.integer)
+                and np.issubdtype(w.dtype, np.integer))
+    # units==1: no NoC — every instance refetches its stationary tiles and
+    # streams privately; padded-tile accounting matches the analytic model.
+    multicast = cfg.units > 1
+    # One activation broadcast can only serve several Legions when they
+    # consume the *same* data: a shared input matrix (x is [M, K]) or an
+    # N-partitioned instance (all Legions slice one GEMM).
+    broadcast_stream = multicast and (
+        x.ndim == 2 or plan.mapping == N_PARTITION
+    )
+    # Stationary tiles move padded to the full R*D grid width, except under
+    # multi-Legion N-partitioning where the memory controller clips the last
+    # Legion's fetch to the matrix edge (the analytic model's cap).
+    clip_weight_tiles = multicast and plan.mapping == N_PARTITION
+
+    return ExecContext(
+        cfg=cfg, plan=plan, mode=mode, x_pad=x_pad, w_pad=w_pad, count=count,
+        m=m, k=k, n=n, k_window=k_window, k_tiles=k_tiles, n_tile=n_tile,
+        int_path=int_path, banks=accumulators or cfg.accumulators,
+        granularity=granularity, kernel_backend=kernel_backend,
+        emulate_cores=emulate_cores, multicast=multicast,
+        broadcast_stream=broadcast_stream,
+        clip_weight_tiles=clip_weight_tiles,
+        wbytes=mode.weight_bytes_per_element(cfg), abytes=cfg.dtype_bytes,
+        books=books, packed=packed,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# The window/kernel loop (events always; numerics when compute=True)
+# --------------------------------------------------------------------------- #
+
+def _backend_call(ctx: ExecContext, xs: np.ndarray, inst: int, k_lo: int,
+                  k_hi: int, c_lo: int, c_hi: int) -> np.ndarray:
+    """One tile GEMM: x rows [*, k_lo:k_hi] @ w[k_lo:k_hi, c_lo:c_hi]."""
+    from repro.legion.runtime import _instance_view
+
+    if ctx.mode.backend == BITLINEAR:
+        factor = 8 // ctx.mode.weight_bits
+        wp = ctx.packed[inst][k_lo // factor:k_hi // factor, c_lo:c_hi]
+        from repro.kernels.bitlinear.ops import tile_gemm as bl_tile
+        return np.asarray(bl_tile(
+            xs[:, k_lo:k_hi].astype(np.int8), wp,
+            bits=ctx.mode.weight_bits, backend=ctx.kernel_backend,
+        ))
+    ws = _instance_view(ctx.w_pad, inst, 2)[k_lo:k_hi, c_lo:c_hi]
+    return np.asarray(dense_tile_gemm(xs[:, k_lo:k_hi], ws))
+
+
+def _kernel_call(ctx: ExecContext, xs: np.ndarray, inst: int, lo: int,
+                 hi: int) -> np.ndarray:
+    """Whole-slice kernel dispatch (Pallas path exercisable)."""
+    from repro.legion.runtime import _instance_view
+
+    if ctx.mode.backend == BITLINEAR:
+        from repro.kernels.bitlinear.ops import tile_gemm as bl_tile
+        return np.asarray(bl_tile(
+            xs.astype(np.int8), ctx.packed[inst][:, lo:hi],
+            bits=ctx.mode.weight_bits, backend=ctx.kernel_backend,
+        ))
+    ws = _instance_view(ctx.w_pad, inst, 2)[:, lo:hi]
+    if ctx.mode.backend == BLOCK_SPARSE:
+        from repro.kernels.block_sparse.ops import tile_gemm as bs_tile
+        return np.asarray(bs_tile(
+            xs.astype(np.float32), ws.astype(np.float32),
+            backend=ctx.kernel_backend,
+        ))
+    return np.asarray(dense_tile_gemm(xs, ws))
+
+
+def _window_partial(ctx: ExecContext, xs: np.ndarray, a: Assignment,
+                    book: Optional[ZeroTileBook], i: int, gtile: int,
+                    lo: int, hi: int):
+    if ctx.emulate_cores:
+        partial = None
+        for c in range(ctx.cfg.cores):
+            if book is not None and gtile < book.tile_nonzero.shape[2] \
+                    and not book.tile_nonzero[i, c, gtile]:
+                continue   # gated core (zero tile)
+            k_lo = i * ctx.k_window + c * ctx.cfg.d
+            p = _backend_call(ctx, xs, a.instance, k_lo, k_lo + ctx.cfg.d,
+                              lo, hi)
+            partial = p if partial is None else partial + p
+        return partial if partial is not None else 0
+    return _backend_call(ctx, xs, a.instance, i * ctx.k_window,
+                         (i + 1) * ctx.k_window, lo, hi)
+
+
+def run_assignment_loop(
+    ctx: ExecContext, instruments: Sequence[object], *, compute: bool = True,
+) -> Optional[np.ndarray]:
+    """Walk every assignment's psum-accumulator loop, firing instrument
+    events; with ``compute`` the numerics run in-process too.
+
+    Backends share this walk so traffic/cycle accounting is identical no
+    matter where the numerics execute (ShardedExecutor runs it with
+    ``compute=False`` and does the math on the mesh).
+    """
+    from repro.legion.runtime import _instance_view
+
+    plan = ctx.plan
+    out = None
+    if compute:
+        out = np.zeros((ctx.count, ctx.m, ctx.n), dtype=ctx.out_dtype)
+    for a in sorted(plan.assignments, key=lambda a: (a.round, a.legion)):
+        inst = a.instance
+        xs = _instance_view(ctx.x_pad, inst, 2)
+        book = ctx.books[inst] if ctx.books else None
+        wkey = (a.multicast_group if ctx.multicast else ("inst", inst))
+        tiles = ctx.tiles_for(a)
+        a_exec = 0           # executed (K-window, N-tile) passes
+        a_skip = 0           # ZTB fully-sparse windows skipped outright
+        a_wbytes = 0.0       # stationary bytes the passes fetched
+
+        # Tiles are served by `banks` parallel accumulators: process them in
+        # bank-sized groups (numerically associative — ordering only).
+        for g in range(0, len(tiles), ctx.banks):
+            for (j, lo, hi) in tiles[g:g + ctx.banks]:
+                gtile = lo // ctx.n_tile   # global N-tile id (book column)
+                executed = 0
+                for i in range(ctx.k_tiles):
+                    if ctx.window_skipped(book, i, gtile):
+                        a_skip += 1
+                        _each(instruments, "on_window_skip",
+                              stage=plan.stage, round_=a.round,
+                              legion=a.legion, instance=inst, k_tile=i,
+                              n_lo=lo, n_hi=hi)
+                        continue          # fully-sparse window: skip outright
+                    if compute and ctx.granularity == "window":
+                        out[inst, :, lo:hi] += _window_partial(
+                            ctx, xs, a, book, i, gtile, lo, hi)
+                    # ---- traffic events (identical per granularity) ------ #
+                    width = (hi - lo) if ctx.clip_weight_tiles else ctx.n_tile
+                    nbytes_w = ctx.k_window * width * ctx.wbytes
+                    _each(instruments, "on_weight_fetch",
+                          ("w", plan.stage, wkey, i, lo), nbytes_w)
+                    akey_owner = (a.round if ctx.broadcast_stream
+                                  else ("inst", inst))
+                    _each(instruments, "on_act_stream",
+                          ("a", plan.stage, akey_owner, j, i),
+                          ctx.m * ctx.k_window * ctx.abytes)
+                    psum = (hi - lo) * ctx.m * 4.0
+                    _each(instruments, "on_psum",
+                          psum if executed == 0 else 2.0 * psum)
+                    _each(instruments, "on_pass", stage=plan.stage,
+                          round_=a.round, legion=a.legion, instance=inst,
+                          k_tile=i, n_lo=lo, n_hi=hi)
+                    executed += 1
+                    a_exec += 1
+                    a_wbytes += nbytes_w
+
+        _each(instruments, "on_assignment_end", stage=plan.stage,
+              round_=a.round, legion=a.legion, instance=inst, m=ctx.m,
+              passes=a_exec, skipped=a_skip, weight_bytes=a_wbytes)
+
+        if compute and ctx.granularity == "kernel":
+            res = _kernel_call(ctx, xs, inst, a.n_lo, a.n_hi)
+            out[inst, :, a.n_lo:a.n_hi] += res.astype(out.dtype)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Executor backends
+# --------------------------------------------------------------------------- #
+
+class ExecutorBackend:
+    """Owns the numerics of a prepared :class:`ExecContext`.
+
+    ``execute`` must fire the full instrument event stream (via
+    :func:`run_assignment_loop`) and return ``[count, M, N]`` outputs.
+    """
+
+    name = "abstract"
+
+    def execute(self, ctx: ExecContext,
+                instruments: Sequence[object]) -> np.ndarray:
+        raise NotImplementedError
+
+
+class InProcessExecutor(ExecutorBackend):
+    """The classic single-process window/kernel loop (numpy + kernels)."""
+
+    name = "in-process"
+
+    def execute(self, ctx: ExecContext,
+                instruments: Sequence[object]) -> np.ndarray:
+        return run_assignment_loop(ctx, instruments, compute=True)
+
+
+class ShardedExecutor(ExecutorBackend):
+    """Executes a plan's Legion axis device-parallel on a JAX mesh.
+
+    The ROADMAP's "map Legions onto a real mesh axis" item: assignments are
+    grouped per Legion, stacked ``[legions, rounds, ...]``, and the legion
+    axis is sharded over a mesh axis via ``repro.compat.shard_map`` with
+    ``repro.distributed.sharding`` rules — each device computes its Legions'
+    GEMMs in one batched int32 ``matmul``.  Integer accumulation is
+    associative, so outputs are **bit-exact** with
+    :class:`InProcessExecutor`; ZTB-gated windows are zeroed host-side
+    before shipping, reproducing the skip semantics.
+
+    Instrument events (traffic/cycles) come from the same shared walk as the
+    in-process path, so cross-validation against ``simulate()`` is
+    backend-independent.
+    """
+
+    name = "sharded"
+
+    def __init__(self, *, devices: Optional[Sequence] = None,
+                 axis: str = "legion") -> None:
+        self.devices = devices
+        self.axis = axis
+        self.devices_used = 0      # set per execute()
+        # mesh + jitted shard_map per (shard count, shared-x): keeps function
+        # identity stable so repeat executions hit jit's compilation cache
+        # instead of retracing every call
+        self._fns: Dict[Tuple[int, bool], object] = {}
+
+    # ------------------------------------------------------------------ #
+    def execute(self, ctx: ExecContext,
+                instruments: Sequence[object]) -> np.ndarray:
+        if ctx.granularity != "window":
+            raise ValueError(
+                "ShardedExecutor executes the window (psum accumulator) "
+                f"loop only; granularity={ctx.granularity!r}"
+            )
+        if not ctx.int_path:
+            raise ValueError(
+                "ShardedExecutor guarantees bit-exactness via associative "
+                "int32 accumulation; float operands need InProcessExecutor"
+            )
+        if ctx.emulate_cores and ctx.books:
+            raise ValueError(
+                "ShardedExecutor cannot reproduce per-core ZTB gating "
+                "(emulate_cores with ZeroTileBooks may exclude non-zero "
+                "tiles); use InProcessExecutor"
+            )
+        if ctx.kernel_backend != "reference":
+            raise ValueError(
+                "ShardedExecutor computes one batched XLA matmul and never "
+                f"invokes the tile kernels; kernel_backend="
+                f"{ctx.kernel_backend!r} needs InProcessExecutor"
+            )
+        # accounting walk — identical event stream to the in-process path
+        run_assignment_loop(ctx, instruments, compute=False)
+        return self._compute(ctx)
+
+    # ------------------------------------------------------------------ #
+    def _compute(self, ctx: ExecContext) -> np.ndarray:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.compat import make_mesh, shard_map
+        from repro.distributed.sharding import legion_rules
+        from repro.legion.runtime import _instance_view
+
+        devices = list(self.devices) if self.devices else list(jax.devices())
+        per_legion: Dict[int, List[Assignment]] = {}
+        for a in sorted(ctx.plan.assignments, key=lambda a: (a.round,
+                                                             a.legion)):
+            per_legion.setdefault(a.legion, []).append(a)
+        legions = sorted(per_legion)
+        nshard = max(min(len(devices), len(legions)), 1)
+        l_pad = math.ceil(len(legions) / nshard) * nshard
+        rmax = max(len(v) for v in per_legion.values())
+        width = max(a.n_hi - a.n_lo for a in ctx.plan.assignments)
+        k_pad = ctx.k_tiles * ctx.k_window
+
+        # A shared input matrix ([M, K]) broadcasts to every (legion, slot)
+        # inside the matmul — materializing l_pad*rmax copies host-side
+        # would ship identical data to every device.
+        shared_x = ctx.x_pad.ndim == 2
+        xs_stack = ctx.x_pad if shared_x else np.zeros(
+            (l_pad, rmax, ctx.m, k_pad), dtype=ctx.x_pad.dtype)
+        ws_stack = np.zeros((l_pad, rmax, k_pad, width),
+                            dtype=ctx.w_pad.dtype)
+        slots: List[Tuple[int, int, Assignment]] = []
+        for li, leg in enumerate(legions):
+            for slot, a in enumerate(per_legion[leg]):
+                if not shared_x:
+                    xs_stack[li, slot] = _instance_view(ctx.x_pad,
+                                                        a.instance, 2)
+                wsl = np.array(
+                    _instance_view(ctx.w_pad, a.instance, 2)[:, a.n_lo:a.n_hi]
+                )
+                book = ctx.books[a.instance] if ctx.books else None
+                if book is not None:
+                    # reproduce the skip semantics exactly: a gated window
+                    # contributes nothing, even if the caller's book gates
+                    # tiles that are not actually zero
+                    for (_j, lo, hi) in ctx.tiles_for(a):
+                        gtile = lo // ctx.n_tile
+                        for i in range(ctx.k_tiles):
+                            if ctx.window_skipped(book, i, gtile):
+                                wsl[i * ctx.k_window:(i + 1) * ctx.k_window,
+                                    lo - a.n_lo:hi - a.n_lo] = 0
+                ws_stack[li, slot, :, :wsl.shape[1]] = wsl
+                slots.append((li, slot, a))
+
+        self.devices_used = nshard
+        key = (nshard, shared_x)
+        if key not in self._fns:
+            mesh = make_mesh((nshard,), (self.axis,),
+                             devices=devices[:nshard])
+            rules = legion_rules(mesh, axis=self.axis)
+
+            def legion_matmul(xs, ws):
+                # [M, K] (shared, broadcast) or [l, r, M, K] @ [l, r, K, N]
+                return jnp.matmul(xs.astype(jnp.int32),
+                                  ws.astype(jnp.int32))
+
+            x_spec = (rules.spec("m", "k") if shared_x
+                      else rules.spec("legion", "round", "m", "k"))
+            self._fns[key] = jax.jit(shard_map(
+                legion_matmul, mesh=mesh,
+                in_specs=(x_spec,
+                          rules.spec("legion", "round", "k", "n")),
+                out_specs=rules.spec("legion", "round", "m", "n"),
+            ))
+        stacked = np.asarray(self._fns[key](jnp.asarray(xs_stack),
+                                            jnp.asarray(ws_stack)))
+
+        out = np.zeros((ctx.count, ctx.m, ctx.n), dtype=ctx.out_dtype)
+        for (li, slot, a) in slots:
+            out[a.instance, :, a.n_lo:a.n_hi] = \
+                stacked[li, slot][:, :a.n_hi - a.n_lo]
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# RunReport
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class RunReport:
+    """Everything one :meth:`Machine.run` produced, in one object."""
+
+    outputs: np.ndarray               # [count, M, N] int32 (or float32)
+    plan: StagePlan
+    mode: ModeSpec
+    backend: str                      # executor name that ran the numerics
+    trace: Optional[TrafficTracer]
+    cycles: Optional[CycleCounter]
+    ztb_stats: Optional[ZTBStats] = None
+    workload: Optional[GEMMWorkload] = None
+    traffic_validation: Optional[StageValidation] = None
+    cycle_validation: Optional[CycleValidation] = None
+
+    @property
+    def output(self) -> np.ndarray:
+        """Single-instance convenience view."""
+        if self.outputs.shape[0] != 1:
+            raise ValueError(f"{self.outputs.shape[0]} instances; use "
+                             f".outputs")
+        return self.outputs[0]
+
+    @property
+    def traffic(self) -> Optional[TrafficTotals]:
+        """Measured bytes of the ONE executed layer (the runtime convention:
+        a workload executes a single layer numerically).  The validation
+        fields hold the whole-model view — measured totals scaled by
+        ``workload.layers`` against ``simulate()``'s per-model numbers;
+        scale by ``workload.layers`` yourself for model-level bytes."""
+        return self.trace.totals if self.trace is not None else None
+
+    @property
+    def total_cycles(self) -> int:
+        """Counted cycles of the ONE executed layer (see :attr:`traffic`
+        for the single-layer vs whole-model convention)."""
+        return self.cycles.total_cycles if self.cycles is not None else 0
+
+    @property
+    def validations(self) -> List[object]:
+        return [v for v in (self.traffic_validation, self.cycle_validation)
+                if v is not None]
+
+    @property
+    def ok(self) -> bool:
+        """All attached validations within tolerance (vacuously True)."""
+        return all(v.ok for v in self.validations)
+
+    def __str__(self) -> str:
+        lines = [f"RunReport[{self.plan.stage}] mode={self.mode.name} "
+                 f"backend={self.backend} outputs={self.outputs.shape}"]
+        lines += [f"  {v}" for v in self.validations]
+        return "\n".join(lines)
+
+
+def _build_validations(
+    stage: str, measured_traffic: TrafficTotals,
+    measured_cycles: CycleBreakdown, sim, rtol: float,
+) -> Tuple[StageValidation, CycleValidation]:
+    """Measured totals vs one simulated stage (shared by ``Machine.run``
+    and ``Machine.cross_validate``)."""
+    return (
+        StageValidation(
+            stage=stage, measured=measured_traffic,
+            analytic=TrafficTotals(
+                weight_bytes=sim.weight_bytes, act_bytes=sim.act_bytes,
+                psum_bytes=sim.psum_bytes,
+            ),
+            rtol=rtol,
+        ),
+        CycleValidation(
+            stage=stage, measured=measured_cycles.total,
+            analytic=sim.cycles, rtol=rtol,
+            measured_breakdown=measured_cycles.as_dict(),
+            analytic_breakdown=sim.cycle_breakdown,
+        ),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Machine
+# --------------------------------------------------------------------------- #
+
+class Machine:
+    """Session facade over the Legion runtime: one object owns mode
+    selection, plan execution, and measurement.
+
+        machine = Machine(dlegion())                      # in-process
+        report = machine.run(workload)                    # RunReport
+        machine = Machine(cfg, backend=ShardedExecutor()) # device-parallel
+        machine = Machine(cfg, instruments=[my_probe])    # custom hooks
+
+    Every run attaches a fresh :class:`TrafficTracer` + :class:`CycleCounter`
+    (unless per-run ``instruments`` are given) plus the machine's registered
+    instruments, so ``report.traffic``/``report.cycles`` are per-run while
+    registered instruments observe the whole session.
+    """
+
+    def __init__(
+        self,
+        cfg: AcceleratorConfig,
+        *,
+        backend: Optional[ExecutorBackend] = None,
+        instruments: Optional[Sequence[object]] = None,
+        granularity: str = "window",
+        kernel_backend: str = "reference",
+        emulate_cores: bool = False,
+        accumulators: Optional[int] = None,
+        mem_bw_bytes_per_cycle: float = math.inf,
+    ) -> None:
+        validate_options(granularity=granularity,
+                         kernel_backend=kernel_backend,
+                         accumulators=accumulators)
+        if mem_bw_bytes_per_cycle <= 0:
+            raise ValueError(
+                "mem_bw_bytes_per_cycle must be > 0 (math.inf = prefetch "
+                f"fully hidden); got {mem_bw_bytes_per_cycle}"
+            )
+        self.cfg = cfg
+        self.backend = backend if backend is not None else InProcessExecutor()
+        self.instruments: List[object] = list(instruments or ())
+        self.granularity = granularity
+        self.kernel_backend = kernel_backend
+        self.emulate_cores = emulate_cores
+        self.accumulators = accumulators
+        self.mem_bw = mem_bw_bytes_per_cycle
+
+    # ------------------------------------------------------------------ #
+    def add_instrument(self, instrument: object) -> object:
+        """Register a session-lifetime instrument; returns it for chaining."""
+        self.instruments.append(instrument)
+        return instrument
+
+    # ------------------------------------------------------------------ #
+    def run(
+        self,
+        work: Union[GEMMWorkload, StagePlan],
+        x: Optional[np.ndarray] = None,
+        w: Optional[np.ndarray] = None,
+        *,
+        mode: Optional[ModeSpec] = None,
+        ztb: Union[None, bool, ZeroTileBook, Sequence[ZeroTileBook]] = None,
+        seed: int = 0,
+        ztb_sparsity: float = 0.0,
+        check_outputs: bool = True,
+        validate: Optional[bool] = None,
+        rtol: float = 0.05,
+        instruments: Optional[Sequence[object]] = None,
+    ) -> RunReport:
+        """Execute a workload (planned + synthesized for you) or an explicit
+        (plan, x, w) triple through the machine's backend.
+
+        Every run checks outputs against the dense ``x @ w`` reference
+        (bit-exact on the integer path, allclose on float) unless
+        ``check_outputs=False`` or caller-supplied ZTB books gate the
+        outputs away from the reference.  Workload runs additionally
+        cross-validate
+        measured traffic/cycles against ``simulate()`` for the workload's
+        stage (``rtol``).  ``validate``: ``None`` (default)
+        validates when the run's measuring instruments are its own fresh
+        pair and ``simulate()`` models the run; ``True`` requires validation
+        (raises if the per-run instruments lack a tracer/counter, or the
+        run has no analytic counterpart); ``False`` skips it.
+        """
+        from repro.legion.runtime import _instance_view, synthesize_operands
+
+        workload: Optional[GEMMWorkload] = None
+        if isinstance(work, GEMMWorkload):
+            workload = work
+            plan = plan_stage(self.cfg, work)
+            if x is None and w is None:
+                x, w = synthesize_operands(
+                    work, seed=seed, ztb_sparsity=ztb_sparsity,
+                    k_window=(plan.assignments[0].k_window
+                              if plan.assignments else 0),
+                )
+                if ztb is None and ztb_sparsity > 0.0:
+                    ztb = True
+            elif x is None or w is None:
+                raise ValueError("pass both x and w, or neither")
+            elif ztb_sparsity:
+                raise ValueError(
+                    "ztb_sparsity prunes *synthesized* operands; with "
+                    "explicit x and w, prune the weights yourself and pass "
+                    "ztb=True (or pre-built books)"
+                )
+        elif isinstance(work, StagePlan):
+            if ztb_sparsity:
+                raise ValueError(
+                    "ztb_sparsity synthesizes operands and only applies to "
+                    "workload runs; pass ztb= for an explicit plan"
+                )
+            plan = work
+            if x is None or w is None:
+                raise ValueError("Machine.run(plan, ...) needs explicit "
+                                 "x and w operands")
+        else:
+            raise TypeError(
+                f"expected GEMMWorkload or StagePlan, got "
+                f"{type(work).__name__}"
+            )
+
+        ctx = prepare_context(
+            self.cfg, plan, x, w, mode=mode, ztb=ztb,
+            granularity=self.granularity, kernel_backend=self.kernel_backend,
+            emulate_cores=self.emulate_cores, accumulators=self.accumulators,
+        )
+        # Per-run instruments (fresh pair, or the caller's) come first; the
+        # report's trace/cycles bind to them, never to session-lifetime
+        # instruments whose totals span earlier runs.
+        if instruments is None:
+            per_run: List[object] = [
+                TrafficTracer(),
+                CycleCounter(self.cfg,
+                             mem_bw_bytes_per_cycle=self.mem_bw),
+            ]
+        else:
+            per_run = list(instruments)
+        emit = per_run + self.instruments
+
+        _each(emit, "on_plan_begin", plan, ctx.mode, ctx)
+        outputs = self.backend.execute(ctx, emit)
+        _each(emit, "on_plan_end", outputs)
+
+        tracer = next((i for i in per_run if isinstance(i, TrafficTracer)),
+                      None)
+        counter = next((i for i in per_run if isinstance(i, CycleCounter)),
+                       None)
+
+        # Caller-supplied books may gate windows whose data is NOT zero —
+        # outputs then intentionally diverge from the dense reference, so
+        # only self-derived sparsity (ztb=True builds books from w's actual
+        # zeros) keeps the check meaningful.
+        caller_books = ztb not in (None, False, True)
+        if check_outputs and not caller_books:
+            x_arr, w_arr = np.asarray(x), np.asarray(w)
+            for inst in range(ctx.count):
+                if ctx.int_path:
+                    xi = _instance_view(x_arr, inst, 2).astype(np.int64)
+                    wi = _instance_view(w_arr, inst, 2).astype(np.int64)
+                    got = outputs[inst].astype(np.int64)
+                    mismatch = got != xi @ wi
+                else:
+                    xi = _instance_view(x_arr, inst, 2).astype(np.float64)
+                    wi = _instance_view(w_arr, inst, 2).astype(np.float64)
+                    got = outputs[inst]
+                    mismatch = ~np.isclose(got, xi @ wi, rtol=1e-5,
+                                           atol=1e-5)
+                if mismatch.any():
+                    raise AssertionError(
+                        f"{plan.stage} instance {inst}: runtime output != "
+                        f"x @ w reference at {int(mismatch.sum())} positions "
+                        f"(mode {ctx.mode.name}, backend {self.backend.name})"
+                    )
+
+        report = RunReport(
+            outputs=outputs, plan=plan, mode=ctx.mode,
+            backend=self.backend.name, trace=tracer, cycles=counter,
+            ztb_stats=ctx.ztb_stats(), workload=workload,
+        )
+        # Per-stage validation against the analytic simulator.  Auto mode
+        # (validate=None) requires the measuring instruments to be this
+        # run's own fresh pair (caller-passed instruments may carry earlier
+        # runs' totals) and simulate() to model the run (its ZTB discount
+        # applies to sub-8-bit weight stages only).  An explicit
+        # validate=True refuses to degrade silently.
+        if validate and workload is None:
+            raise ValueError(
+                "validate=True needs a GEMMWorkload run — an explicit plan "
+                "has no analytic simulate() counterpart"
+            )
+        if validate is not False and workload is not None:
+            models_run = report.ztb_stats is None or workload.weight_bits < 8
+            measurable = tracer is not None and counter is not None
+            if validate:
+                if not measurable:
+                    raise ValueError(
+                        "validate=True needs a TrafficTracer and a "
+                        "CycleCounter among the per-run instruments"
+                    )
+                if not models_run:
+                    raise ValueError(
+                        "validate=True: simulate() models ZTB only for "
+                        "sub-8-bit weights — this run has no analytic "
+                        "counterpart"
+                    )
+            if measurable and models_run and \
+                    (validate or instruments is None):
+                sim = simulate(self.cfg, [workload],
+                               ztb=report.ztb_stats).stages[workload.stage]
+                scale = workload.layers
+                br = counter.stage_breakdown().get(
+                    plan.stage, CycleBreakdown()).scaled(scale)
+                report.traffic_validation, report.cycle_validation = \
+                    _build_validations(workload.stage,
+                                       tracer.totals.scaled(scale), br, sim,
+                                       rtol)
+        return report
+
+    # ------------------------------------------------------------------ #
+    def cross_validate(
+        self,
+        workloads: Sequence[GEMMWorkload],
+        *,
+        rtol: float = 0.05,
+        seed: int = 0,
+        ztb_sparsity: float = 0.0,
+        check_outputs: bool = True,
+    ) -> Tuple[List[StageValidation], List[CycleValidation]]:
+        """Execute every workload through this machine and compare measured
+        per-stage traffic AND cycles against ``simulate()`` in one pass.
+
+        One layer of each workload executes numerically; measured totals
+        scale by ``w.layers`` — the convention the old module-level
+        ``cross_validate``/``cross_validate_cycles`` (now thin wrappers over
+        this) always used.  Quantized stages get ``ztb_sparsity`` pruning;
+        8-bit act-to-act stages stay dense.
+        """
+        workloads = list(workloads)
+        ztb_stats: Optional[ZTBStats] = None
+        per_traffic: Dict[str, TrafficTotals] = {}
+        per_cycles: Dict[str, CycleBreakdown] = {}
+        for w in workloads:
+            rep = self.run(
+                w, seed=seed,
+                ztb_sparsity=ztb_sparsity if w.weight_bits < 8 else 0.0,
+                check_outputs=check_outputs, validate=False,
+            )
+            if rep.ztb_stats is not None and ztb_stats is None:
+                ztb_stats = rep.ztb_stats
+            per_traffic.setdefault(w.stage, TrafficTotals()).add(
+                rep.trace.totals.scaled(w.layers))
+            for stage, br in rep.cycles.stage_breakdown().items():
+                per_cycles.setdefault(stage, CycleBreakdown()).add(
+                    br.scaled(w.layers))
+
+        report = simulate(self.cfg, workloads, ztb=ztb_stats)
+        traffic_vals: List[StageValidation] = []
+        cycle_vals: List[CycleValidation] = []
+        for stage, measured in per_traffic.items():
+            tv, cv = _build_validations(
+                stage, measured, per_cycles.get(stage, CycleBreakdown()),
+                report.stages[stage], rtol,
+            )
+            traffic_vals.append(tv)
+            cycle_vals.append(cv)
+        return traffic_vals, cycle_vals

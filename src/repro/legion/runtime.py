@@ -1,32 +1,26 @@
-"""Legion runtime — numerical execution of scheduler StagePlans (SS IV-B/C).
+"""Legion runtime — plan validation, operand synthesis, legacy entry points.
 
-The missing link between the repo's three models of D-Legion: this executor
-consumes the orchestrator's explicit :class:`~repro.core.scheduler.StagePlan`
-and actually runs every :class:`Assignment`'s N-slice GEMM, per Legion, per
-round, dispatching tiles to the kernel backend the execution mode selects
-(dense reference / packed-ternary ``bitlinear`` / ZTB-driven
-``block_sparse``) and reducing partial sums the way the paper's parallel
-accumulators do:
+The numerical execution of scheduler StagePlans (SS IV-B/C) now lives behind
+the :class:`~repro.legion.machine.Machine` session facade: operand
+preparation and the psum-accumulator window loop are in
+``repro.legion.machine`` (shared by every :class:`ExecutorBackend`), and
+measurement is pluggable via the :class:`Instrument` protocol.
 
-* each K-window (``C * D`` elements — the C cores' K-split) produces one
-  spatial partial sum: with ``emulate_cores=True`` the window is literally
-  computed as C per-core ``D``-wide GEMMs and reduced across cores, the
-  accumulator tree's adder-level behaviour;
-* windows accumulate temporally into psum banks — ``cfg.accumulators``
-  parallel banks serve the N-tiles of a pass round-robin, so at most that
-  many tiles are in flight at once;
-* ZTB fully-sparse windows are skipped outright (no fetch, no psum round);
-  partially-sparse windows only gate the cores holding zero tiles.
+This module keeps the pieces that are not session state:
 
-Every byte the execution moves is reported to a
-:class:`~repro.legion.trace.TrafficTracer`, which deduplicates multicast
-fetches — measured totals are then comparable to ``simulate()``'s analytic
-formulas (see ``repro.legion.trace.cross_validate``).
+* :func:`validate_coverage` — a plan must tile each instance's N-range
+  exactly once (gaps/overlaps are hard errors);
+* :func:`synthesize_operands` — reproducible int8 operands per workload;
+* :class:`ExecutionResult` — the legacy result record;
+* :func:`execute_plan` / :func:`execute_workload` — **deprecated** shims
+  that delegate to ``Machine`` and emit ``DeprecationWarning``; use
+  ``Machine(cfg).run(...)`` instead.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import (
     TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union,
 )
@@ -37,13 +31,11 @@ if TYPE_CHECKING:  # pragma: no cover
     from repro.legion.latency import CycleCounter
 
 from repro.core.config import AcceleratorConfig
-from repro.core.scheduler import StagePlan, plan_stage
+from repro.core.scheduler import StagePlan
 from repro.core.sparsity import ZeroTileBook, ZTBStats, ztb_from_weight
-from repro.core.workloads import GEMMWorkload, N_PARTITION
-from repro.kernels import dense_tile_gemm
-from repro.legion.modes import BITLINEAR, BLOCK_SPARSE, ModeSpec, select_mode
+from repro.core.workloads import GEMMWorkload
+from repro.legion.modes import ModeSpec
 from repro.legion.trace import TrafficTracer
-from repro.quant.packing import pack_2bit_kmajor, pack_4bit_kmajor
 
 
 class PlanCoverageError(ValueError):
@@ -52,7 +44,12 @@ class PlanCoverageError(ValueError):
 
 @dataclasses.dataclass
 class ExecutionResult:
-    """Outputs + measured traffic (and cycles) of one executed StagePlan."""
+    """Outputs + measured traffic (and cycles) of one executed StagePlan.
+
+    The legacy result record of ``execute_plan``/``execute_workload``; new
+    code receives a :class:`~repro.legion.machine.RunReport` from
+    ``Machine.run`` instead (same payload plus per-stage validation).
+    """
 
     outputs: np.ndarray            # [count, M, N] int32 (or float32)
     trace: TrafficTracer
@@ -102,7 +99,7 @@ def validate_coverage(
 
 
 # --------------------------------------------------------------------------- #
-# Execution
+# Operand helpers (shared with repro.legion.machine)
 # --------------------------------------------------------------------------- #
 
 def _instance_view(arr: np.ndarray, inst: int, ndim: int) -> np.ndarray:
@@ -148,6 +145,10 @@ def combined_ztb_stats(books: Sequence[ZeroTileBook]) -> ZTBStats:
     )
 
 
+# --------------------------------------------------------------------------- #
+# Deprecated entry points (delegate to Machine)
+# --------------------------------------------------------------------------- #
+
 def execute_plan(
     cfg: AcceleratorConfig,
     plan: StagePlan,
@@ -163,220 +164,34 @@ def execute_plan(
     emulate_cores: bool = False,
     accumulators: Optional[int] = None,
 ) -> ExecutionResult:
-    """Run every assignment of ``plan`` and return outputs + traffic.
+    """Deprecated: use ``Machine(cfg).run(plan, x, w)``.
 
-    Args:
-      x: activations — [M, K] (one stream shared by all instances) or
-         [count, M, K] (per-instance, e.g. per-head Q).
-      w: stationary operand — [K, N] or [count, K, N], canonical dense
-         (int8 for quantized modes; the runtime packs for the bitlinear
-         backend itself).
-      mode: execution mode; defaults to
-         ``select_mode(cfg, plan.weight_bits, sparse=ztb is not None)``.
-      ztb: ``True`` builds ZeroTileBooks offline from ``w``'s actual zero
-         blocks; or pass pre-built book(s).  Fully-sparse windows are
-         skipped, partially-sparse windows gate cores.
-      cycles: optional :class:`~repro.legion.latency.CycleCounter`; every
-         executed (K-window, N-tile) pass is reported to it, so the counted
-         latency (fill/stream/drain/prefetch) is comparable to
-         ``simulate()``'s eq.-2 cycles (ZTB-skipped windows cost nothing).
-      granularity: ``"window"`` runs the explicit psum-accumulator loop
-         (one backend call per K-window, the paper's dataflow); ``"kernel"``
-         issues one whole-slice kernel call per assignment (e.g. the Pallas
-         bitlinear / block-sparse kernels, interpret mode on CPU) — traffic
-         is accounted identically.
-      kernel_backend: forwarded to the kernel ops ("reference" | "pallas").
-      emulate_cores: compute each window as C per-core D-wide GEMMs reduced
-         spatially (slower, bit-exact; exercises the accumulator tree).
-      accumulators: parallel psum banks (default ``cfg.accumulators``).
+    Runs every assignment of ``plan`` in-process and returns outputs +
+    traffic, exactly as before — via a throwaway
+    :class:`~repro.legion.machine.Machine` session, with ``tracer``/
+    ``cycles`` attached as instruments.
     """
-    if granularity not in ("window", "kernel"):
-        raise ValueError(f"granularity={granularity!r}")
-    x = np.asarray(x)
-    w = np.asarray(w)
-    if not plan.assignments:
-        raise ValueError(f"plan {plan.stage!r} has no assignments")
-    count = max(a.instance for a in plan.assignments) + 1
-    m, k = x.shape[-2], x.shape[-1]
-    n = w.shape[-1]
-    if w.shape[-2] != k:
-        raise ValueError(f"x K={k} vs w K={w.shape[-2]}")
-    validate_coverage(plan, n=n, count=count)
-
-    if mode is None:
-        mode = select_mode(cfg, plan.weight_bits,
-                           sparse=ztb not in (None, False))
-    tracer = tracer if tracer is not None else TrafficTracer()
-
-    a0 = plan.assignments[0]
-    k_window = a0.k_window or cfg.cores * cfg.d
-    k_tiles = a0.k_tiles if a0.k_window else max(math.ceil(k / k_window), 1)
-    k_pad = k_tiles * k_window
-    n_tile = mode.n_tile(cfg.d)
-
-    # ---- operand preparation -------------------------------------------- #
-    x_pad = _pad_axis(x, x.ndim - 1, k_pad)
-    w_pad = _pad_axis(w, w.ndim - 2, k_pad)
-
-    books: Optional[List[ZeroTileBook]] = None
-    if ztb is True:
-        books = _build_books(w_pad, count, cfg, mode)
-    elif isinstance(ztb, ZeroTileBook):
-        books = [ztb] * count
-    elif ztb not in (None, False):
-        books = list(ztb)
-        if len(books) != count:
-            raise ValueError(f"{len(books)} books for {count} instances")
-
-    packed: Optional[List[np.ndarray]] = None
-    if mode.backend == BITLINEAR:
-        factor = 8 // mode.weight_bits
-        if k_window % factor or cfg.d % factor:
-            raise ValueError(
-                f"K window {k_window} / D {cfg.d} not divisible by packing "
-                f"factor {factor}"
-            )
-        pack = pack_2bit_kmajor if mode.weight_bits == 2 else pack_4bit_kmajor
-        packed = [
-            np.asarray(pack(_instance_view(w_pad, i, 2).astype(np.int8)))
-            for i in range(count)
-        ]
-
-    int_path = (np.issubdtype(x.dtype, np.integer)
-                and np.issubdtype(w.dtype, np.integer))
-    out = np.zeros((count, m, n),
-                   dtype=np.int32 if int_path else np.float32)
-
-    wbytes = mode.weight_bytes_per_element(cfg)
-    abytes = cfg.dtype_bytes
-    # units==1: no NoC — every instance refetches its stationary tiles and
-    # streams privately; padded-tile accounting matches the analytic model.
-    multicast = cfg.units > 1
-    # One activation broadcast can only serve several Legions when they
-    # consume the *same* data: a shared input matrix (x is [M, K]) or an
-    # N-partitioned instance (all Legions slice one GEMM).  Distinct
-    # per-head inputs under head-per-unit each stream privately.
-    broadcast_stream = multicast and (
-        x.ndim == 2 or plan.mapping == N_PARTITION
+    warnings.warn(
+        "execute_plan is deprecated; use repro.legion.Machine(cfg).run(plan,"
+        " x, w) — instruments replace the tracer=/cycles= kwargs",
+        DeprecationWarning, stacklevel=2,
     )
-    # Stationary tiles move padded to the full R*D grid width, except under
-    # multi-Legion N-partitioning where the memory controller clips the last
-    # Legion's fetch to the matrix edge (the analytic model's cap).
-    clip_weight_tiles = multicast and plan.mapping == N_PARTITION
-    banks = accumulators or cfg.accumulators
+    from repro.legion.machine import Machine
 
-    def backend_call(xs: np.ndarray, inst: int, k_lo: int, k_hi: int,
-                     c_lo: int, c_hi: int) -> np.ndarray:
-        """One tile GEMM: x rows [*, k_lo:k_hi] @ w[k_lo:k_hi, c_lo:c_hi]."""
-        if mode.backend == BITLINEAR:
-            factor = 8 // mode.weight_bits
-            wp = packed[inst][k_lo // factor:k_hi // factor, c_lo:c_hi]
-            from repro.kernels.bitlinear.ops import tile_gemm as bl_tile
-            return np.asarray(bl_tile(
-                xs[:, k_lo:k_hi].astype(np.int8), wp,
-                bits=mode.weight_bits, backend=kernel_backend,
-            ))
-        ws = _instance_view(w_pad, inst, 2)[k_lo:k_hi, c_lo:c_hi]
-        return np.asarray(dense_tile_gemm(xs[:, k_lo:k_hi], ws))
-
-    def kernel_call(xs: np.ndarray, inst: int, lo: int, hi: int) -> np.ndarray:
-        """Whole-slice kernel dispatch (Pallas path exercisable)."""
-        if mode.backend == BITLINEAR:
-            from repro.kernels.bitlinear.ops import tile_gemm as bl_tile
-            return np.asarray(bl_tile(
-                xs.astype(np.int8), packed[inst][:, lo:hi],
-                bits=mode.weight_bits, backend=kernel_backend,
-            ))
-        ws = _instance_view(w_pad, inst, 2)[:, lo:hi]
-        if mode.backend == BLOCK_SPARSE:
-            from repro.kernels.block_sparse.ops import tile_gemm as bs_tile
-            return np.asarray(bs_tile(
-                xs.astype(np.float32), ws.astype(np.float32),
-                backend=kernel_backend,
-            ))
-        return np.asarray(dense_tile_gemm(xs, ws))
-
-    for a in sorted(plan.assignments, key=lambda a: (a.round, a.legion)):
-        inst = a.instance
-        xs = _instance_view(x_pad, inst, 2)
-        book = books[inst] if books else None
-        wn = book.window_nonzero if book is not None else None
-        wkey = (a.multicast_group if multicast else ("inst", inst))
-
-        tiles = []
-        lo = a.n_lo
-        j = 0
-        while lo < a.n_hi:
-            tiles.append((j, lo, min(lo + n_tile, a.n_hi)))
-            lo += n_tile
-            j += 1
-        a_exec = 0           # executed (K-window, N-tile) passes
-        a_skip = 0           # ZTB fully-sparse windows skipped outright
-        a_wbytes = 0.0       # stationary bytes the passes fetched
-
-        # Tiles are served by `banks` parallel accumulators: process them in
-        # bank-sized groups (numerically associative — ordering only).
-        for g in range(0, len(tiles), banks):
-            for (j, lo, hi) in tiles[g:g + banks]:
-                gtile = lo // n_tile      # global N-tile id (book column)
-                executed = 0
-                for i in range(k_tiles):
-                    if wn is not None and gtile < wn.shape[1] \
-                            and not wn[i, gtile]:
-                        a_skip += 1
-                        continue          # fully-sparse window: skip outright
-                    if granularity == "window":
-                        if emulate_cores:
-                            partial = None
-                            for c in range(cfg.cores):
-                                if book is not None and \
-                                        gtile < book.tile_nonzero.shape[2] \
-                                        and not book.tile_nonzero[i, c, gtile]:
-                                    continue   # gated core (zero tile)
-                                k_lo = i * k_window + c * cfg.d
-                                p = backend_call(xs, inst, k_lo,
-                                                 k_lo + cfg.d, lo, hi)
-                                partial = p if partial is None else partial + p
-                            if partial is None:
-                                partial = 0
-                        else:
-                            partial = backend_call(
-                                xs, inst, i * k_window, (i + 1) * k_window,
-                                lo, hi,
-                            )
-                        out[inst, :, lo:hi] += partial
-                    # ---- traffic accounting (identical per granularity) --- #
-                    width = (hi - lo) if clip_weight_tiles else n_tile
-                    tracer.weight_tile(
-                        ("w", plan.stage, wkey, i, lo),
-                        k_window * width * wbytes,
-                    )
-                    akey_owner = a.round if broadcast_stream else ("inst",
-                                                                   inst)
-                    tracer.act_stream(
-                        ("a", plan.stage, akey_owner, j, i),
-                        m * k_window * abytes,
-                    )
-                    psum = (hi - lo) * m * 4.0
-                    tracer.psum(psum if executed == 0 else 2.0 * psum)
-                    executed += 1
-                    a_exec += 1
-                    a_wbytes += k_window * width * wbytes
-
-        if cycles is not None:
-            cycles.record_assignment(
-                stage=plan.stage, round_=a.round, legion=a.legion, m=m,
-                passes=a_exec, skipped=a_skip, weight_bytes=a_wbytes,
-            )
-
-        if granularity == "kernel":
-            res = kernel_call(xs, inst, a.n_lo, a.n_hi)
-            out[inst, :, a.n_lo:a.n_hi] += res.astype(out.dtype)
-
+    machine = Machine(
+        cfg, granularity=granularity, kernel_backend=kernel_backend,
+        emulate_cores=emulate_cores, accumulators=accumulators,
+    )
+    tr = tracer if tracer is not None else TrafficTracer()
+    instruments: List[object] = [tr]
+    if cycles is not None:
+        instruments.append(cycles)
+    rep = machine.run(plan, x, w, mode=mode, ztb=ztb,
+                      check_outputs=False,     # execute_plan never checked
+                      instruments=instruments)
     return ExecutionResult(
-        outputs=out, trace=tracer, mode=mode, plan=plan,
-        ztb_stats=combined_ztb_stats(books) if books else None,
-        cycles=cycles,
+        outputs=rep.outputs, trace=tr, mode=rep.mode, plan=rep.plan,
+        ztb_stats=rep.ztb_stats, cycles=cycles,
     )
 
 
@@ -433,33 +248,31 @@ def execute_workload(
     cycles: Optional["CycleCounter"] = None,
     accumulators: Optional[int] = None,
 ) -> ExecutionResult:
-    """Plan + synthesize + execute one workload (single layer).
+    """Deprecated: use ``Machine(cfg).run(workload)``.
 
-    With ``check_outputs`` every instance's output is compared against the
-    plain ``x @ w`` dense reference — int32 accumulation, so equality is
-    exact and any scheduling/psum bug is a hard failure.
+    Plan + synthesize + execute one workload (single layer) with the output
+    check against the plain ``x @ w`` dense reference — via a throwaway
+    :class:`~repro.legion.machine.Machine` session.
     """
-    plan = plan_stage(cfg, w)
-    x, weights = synthesize_operands(
-        w, seed=seed, ztb_sparsity=ztb_sparsity,
-        k_window=plan.assignments[0].k_window if plan.assignments else 0,
+    warnings.warn(
+        "execute_workload is deprecated; use repro.legion.Machine(cfg)"
+        ".run(workload) — the RunReport carries traffic, cycles, and "
+        "validation",
+        DeprecationWarning, stacklevel=2,
     )
-    res = execute_plan(
-        cfg, plan, x, weights,
-        ztb=True if ztb_sparsity > 0.0 else None,
-        granularity=granularity, kernel_backend=kernel_backend,
-        emulate_cores=emulate_cores, cycles=cycles,
-        accumulators=accumulators,
+    from repro.legion.machine import Machine
+
+    machine = Machine(
+        cfg, granularity=granularity, kernel_backend=kernel_backend,
+        emulate_cores=emulate_cores, accumulators=accumulators,
     )
-    if check_outputs:
-        for inst in range(w.count):
-            xi = _instance_view(x, inst, 2).astype(np.int64)
-            ref = (xi @ weights[inst].astype(np.int64)).astype(np.int64)
-            got = res.outputs[inst].astype(np.int64)
-            if not np.array_equal(got, ref):
-                bad = int(np.sum(got != ref))
-                raise AssertionError(
-                    f"{w.stage} instance {inst}: runtime output != x @ w "
-                    f"reference at {bad} positions (mode {res.mode.name})"
-                )
-    return res
+    tr = TrafficTracer()
+    instruments: List[object] = [tr]
+    if cycles is not None:
+        instruments.append(cycles)
+    rep = machine.run(w, seed=seed, ztb_sparsity=ztb_sparsity,
+                      check_outputs=check_outputs, instruments=instruments)
+    return ExecutionResult(
+        outputs=rep.outputs, trace=tr, mode=rep.mode, plan=rep.plan,
+        ztb_stats=rep.ztb_stats, cycles=cycles,
+    )

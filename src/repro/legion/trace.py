@@ -32,7 +32,6 @@ import dataclasses
 from typing import Dict, Hashable, Iterable, List
 
 from repro.core.config import AcceleratorConfig
-from repro.core.simulator import simulate
 from repro.core.workloads import GEMMWorkload
 
 
@@ -77,6 +76,10 @@ class TrafficTracer:
     identifying the physical transfer; repeats of the same key are free
     (the NoC multicasts one fetch to every consumer).  Keys are opaque —
     the runtime encodes its dedup policy in them.
+
+    Implements the :class:`~repro.legion.machine.Instrument` protocol, so a
+    tracer registers directly on a ``Machine`` (``Machine.run`` attaches a
+    fresh one per run by default).
     """
 
     def __init__(self) -> None:
@@ -105,6 +108,16 @@ class TrafficTracer:
 
     def psum(self, nbytes: float) -> None:
         self.totals.psum_bytes += nbytes
+
+    # ---- Instrument protocol (repro.legion.machine) ------------------- #
+    def on_weight_fetch(self, key: Hashable, nbytes: float) -> None:
+        self.weight_tile(key, nbytes)
+
+    def on_act_stream(self, key: Hashable, nbytes: float) -> None:
+        self.act_stream(key, nbytes)
+
+    def on_psum(self, nbytes: float) -> None:
+        self.psum(nbytes)
 
 
 # --------------------------------------------------------------------------- #
@@ -160,35 +173,14 @@ def cross_validate(
 
     Raises AssertionError if ``check_outputs`` and any executed output does
     not match the plain ``x @ w`` reference exactly (int32 accumulation).
+
+    Thin wrapper over :meth:`repro.legion.machine.Machine.cross_validate`
+    (which measures traffic and cycles in a single execution pass).
     """
-    from repro.legion.runtime import execute_workload
+    from repro.legion.machine import Machine
 
-    workloads = list(workloads)
-    ztb_stats = None
-    per_stage: Dict[str, TrafficTotals] = {}
-    for w in workloads:
-        res = execute_workload(
-            cfg, w, seed=seed,
-            ztb_sparsity=ztb_sparsity if w.weight_bits < 8 else 0.0,
-            check_outputs=check_outputs,
-        )
-        if res.ztb_stats is not None and ztb_stats is None:
-            ztb_stats = res.ztb_stats
-        agg = per_stage.setdefault(w.stage, TrafficTotals())
-        agg.add(res.trace.totals.scaled(w.layers))
-
-    report = simulate(cfg, workloads, ztb=ztb_stats)
-    out: List[StageValidation] = []
-    for stage, measured in per_stage.items():
-        sim = report.stages[stage]
-        out.append(StageValidation(
-            stage=stage,
-            measured=measured,
-            analytic=TrafficTotals(
-                weight_bytes=sim.weight_bytes,
-                act_bytes=sim.act_bytes,
-                psum_bytes=sim.psum_bytes,
-            ),
-            rtol=rtol,
-        ))
-    return out
+    traffic_vals, _cycle_vals = Machine(cfg).cross_validate(
+        workloads, rtol=rtol, seed=seed, ztb_sparsity=ztb_sparsity,
+        check_outputs=check_outputs,
+    )
+    return traffic_vals

@@ -1,5 +1,20 @@
 """Serving substrate: continuous-batching engine + cache planning +
-Legion accelerator backend (per-step projection GEMMs through the runtime).
+Legion accelerator backend (per-step projection GEMMs through a
+``repro.legion.Machine`` session).
 """
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.legion_backend import LegionServeBackend
+from repro.serve.legion_backend import (
+    LegionServeBackend,
+    RequestTally,
+    StepTally,
+    extract_projection_ops,
+)
+
+__all__ = [
+    "LegionServeBackend",
+    "Request",
+    "RequestTally",
+    "ServeEngine",
+    "StepTally",
+    "extract_projection_ops",
+]

@@ -5,10 +5,12 @@ never saw them.  This bridge closes that gap the way TensorRT-LLM routes
 per-step projection GEMMs through an accelerator backend: it extracts the
 projection matrices (``wq/wk/wv/wo`` and the SwiGLU ``w1/w2/w3``) from the
 engine's params, lowers every prefill / decode step to scheduler
-:class:`~repro.core.scheduler.StagePlan`\\ s, and drives them through
-:func:`~repro.legion.runtime.execute_plan` — so traced serving traffic
+:class:`~repro.core.scheduler.StagePlan`\\ s, and drives them through a
+:class:`~repro.legion.machine.Machine` session — so traced serving traffic
 produces measured **byte and cycle tallies per request**, cross-validatable
-against ``simulate()`` on the very same workloads.
+against ``simulate()`` on the very same workloads.  Pass ``executor=`` (any
+:class:`~repro.legion.machine.ExecutorBackend`, e.g. ``ShardedExecutor``)
+to choose where the step GEMMs physically run.
 
 One representative layer executes numerically (the weights are the engine's
 actual ternary-quantized matrices, re-extracted to int8); tallies scale by
@@ -28,7 +30,6 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.config import AcceleratorConfig
-from repro.core.scheduler import plan_stage
 from repro.core.simulator import simulate
 from repro.core.workloads import (
     GEMMWorkload,
@@ -37,8 +38,8 @@ from repro.core.workloads import (
     OUT_PROJ,
     QKV_PROJ,
 )
-from repro.legion.latency import CycleCounter, CycleValidation
-from repro.legion.runtime import execute_plan
+from repro.legion.latency import CycleValidation
+from repro.legion.machine import ExecutorBackend, Machine
 from repro.legion.trace import StageValidation, TrafficTotals
 
 # Serve-side stage names beyond the paper's four attention stages: the
@@ -239,6 +240,7 @@ class LegionServeBackend:
         seed: int = 0,
         check_outputs: bool = True,
         mem_bw_bytes_per_cycle: float = math.inf,
+        executor: Optional[ExecutorBackend] = None,
     ) -> None:
         self.cfg = accel_cfg
         self.model_cfg = model_cfg
@@ -246,6 +248,12 @@ class LegionServeBackend:
         self.seed = seed
         self.check_outputs = check_outputs
         self.mem_bw = mem_bw_bytes_per_cycle
+        # One Machine session serves every step; swap `executor` for e.g.
+        # repro.legion.ShardedExecutor to run steps device-parallel.
+        self.machine = Machine(
+            accel_cfg, backend=executor,
+            mem_bw_bytes_per_cycle=mem_bw_bytes_per_cycle,
+        )
         self.per_request: Dict[int, RequestTally] = {}
         self.totals = StepTally(m=0)     # batch-accurate engine totals
         self.prefill_steps = 0
@@ -292,30 +300,19 @@ class LegionServeBackend:
         tally = StepTally(m=m)
         for op in self.ops:
             w = dataclasses.replace(op.workload, m=m)
-            plan = plan_stage(self.cfg, w)
             x = rng.integers(-8, 9, size=(m, w.k)).astype(np.int8)
-            counter = CycleCounter(self.cfg,
-                                   mem_bw_bytes_per_cycle=self.mem_bw)
-            res = execute_plan(self.cfg, plan, x, op.weights, cycles=counter)
-            if self.check_outputs:
-                xi = x.astype(np.int64)
-                for inst in range(w.count):
-                    ref = xi @ op.weights[inst].astype(np.int64)
-                    if not np.array_equal(
-                            res.outputs[inst].astype(np.int64), ref):
-                        raise AssertionError(
-                            f"{w.stage}: serve-path runtime output != x @ w"
-                            f" reference (instance {inst})"
-                        )
-            cycles = counter.total_cycles * w.layers
-            traffic = res.trace.totals.scaled(w.layers)
+            rep = self.machine.run(w, x, op.weights,
+                                   check_outputs=self.check_outputs,
+                                   validate=False)
+            cycles = rep.cycles.total_cycles * w.layers
+            traffic = rep.trace.totals.scaled(w.layers)
             tally.gemms += 1
             tally.weight_bytes += traffic.weight_bytes
             tally.act_bytes += traffic.act_bytes
             tally.psum_bytes += traffic.psum_bytes
             tally.cycles += cycles
-            tally.executed_passes += counter.executed_passes * w.layers
-            tally.skipped_passes += counter.skipped_passes * w.layers
+            tally.executed_passes += rep.cycles.executed_passes * w.layers
+            tally.skipped_passes += rep.cycles.skipped_passes * w.layers
             agg = tally.stages.setdefault(
                 w.stage, StageTally(traffic=TrafficTotals()))
             agg.traffic.add(traffic)

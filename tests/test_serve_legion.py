@@ -130,6 +130,25 @@ def test_uids_unique_across_interleaved_submits(served):
     assert set(backend.per_request) == {a.uid, b.uid}
 
 
+def test_sharded_executor_serve_step_matches_in_process(served):
+    """The serve backend's Machine session accepts any ExecutorBackend:
+    a ShardedExecutor step must tally identically to the in-process one
+    (same instrument stream) and still cross-validate."""
+    from repro.legion import ShardedExecutor
+
+    cfg, _api, params = served
+    inproc = LegionServeBackend(ACCEL, cfg, params)
+    sharded = LegionServeBackend(ACCEL, cfg, params,
+                                 executor=ShardedExecutor())
+    assert sharded.machine.backend.name == "sharded"
+    a, b = inproc.step_tally(1), sharded.step_tally(1)
+    assert (a.cycles, a.weight_bytes, a.act_bytes, a.psum_bytes) == \
+        (b.cycles, b.weight_bytes, b.act_bytes, b.psum_bytes)
+    traffic_vals, cycle_vals = sharded.cross_validate(m=1, rtol=0.05)
+    for v in traffic_vals + cycle_vals:
+        assert v.ok, str(v)
+
+
 def test_step_tally_scales_with_model_layers(served):
     cfg, _api, params = served
     backend = LegionServeBackend(ACCEL, cfg, params)
