@@ -88,8 +88,9 @@ def run():
 
 
 def _serve_path():
-    """One BitNet decode step through the serve-path Legion backend:
-    per-token cycles/bytes for the projection GEMMs, cross-validated."""
+    """One BitNet decode step through the serve-path Legion backend — the
+    full step Program (projections AND act-to-act attention over the KV
+    context), per-token cycles/bytes cross-validated."""
     import jax
 
     from repro.configs import get_config, reduced
@@ -103,19 +104,26 @@ def _serve_path():
     accel = dlegion()
     backend = LegionServeBackend(accel, model_cfg, params)
 
-    # step_tally caches by row count — time the single cold execution
+    # step executions cache by (rows, contexts) — time the cold execution
+    context = 16
     t0 = time.perf_counter()
-    tally = backend.step_tally(1)
+    tally = backend.step_tally(1, (context,))
     us = (time.perf_counter() - t0) * 1e6
-    traffic_vals, cycle_vals = backend.cross_validate(m=1, rtol=0.05)
+    traffic_vals, cycle_vals = backend.cross_validate(
+        m=1, contexts=(context,), rtol=0.05)
+    assert {v.stage for v in traffic_vals} >= {"attn_score", "attn_output"}
     for v in traffic_vals + cycle_vals:
         assert v.ok, f"serve decode: {v}"
     worst_cyc = max(v.rel_err for v in cycle_vals)
     assert worst_cyc <= 0.05, f"serve decode cycle err {worst_cyc:.3f}"
+    attn = (tally.stages["attn_score"].cycles
+            + tally.stages["attn_output"].cycles)
     return [emit(
         "legion_runtime/serve_decode_bitnet", us, {
             "gemms": tally.gemms,
+            "kv_context": context,
             "cycles_per_token": tally.cycles,
+            "attn_cycle_frac": attn / tally.cycles,
             "us_per_token_at_1ghz": tally.seconds(accel.freq_hz) * 1e6,
             "weight_kb_per_token": tally.weight_bytes / 1e3,
             "act_kb_per_token": tally.act_bytes / 1e3,

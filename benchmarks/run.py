@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Paper headline ratios are
 asserted inside the figure benchmarks (fig7/fig8/fig9/fig10/scaling), so a
-green run IS the reproduction gate.
+green run IS the reproduction gate.  A module that raises is reported and
+the harness exits nonzero after the remaining modules ran — CI never
+mistakes a crashed benchmark for a green one.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run dse fig7   # subsets
@@ -10,11 +12,13 @@ green run IS the reproduction gate.
 from __future__ import annotations
 
 import sys
+import traceback
 
 
 def main() -> None:
     from benchmarks import (
-        dse, evaluation, kernel_bench, legion_runtime, legion_sharded,
+        dse, evaluation, kernel_bench, legion_program, legion_runtime,
+        legion_sharded,
     )
 
     which = set(sys.argv[1:])
@@ -22,18 +26,31 @@ def main() -> None:
     def want(tag: str) -> bool:
         return not which or any(w in tag for w in which)
 
+    modules = [
+        ("dse", dse),
+        ("evaluation fig", evaluation),
+        ("kernel", kernel_bench),
+        ("legion runtime", legion_runtime),
+        ("sharded", legion_sharded),
+        ("program", legion_program),
+    ]
+
     print("name,us_per_call,derived")
     rows = []
-    if want("dse"):
-        rows += dse.run()
-    if want("evaluation") or want("fig"):
-        rows += evaluation.run()
-    if want("kernel"):
-        rows += kernel_bench.run()
-    if want("legion") or want("runtime"):
-        rows += legion_runtime.run()
-    if want("sharded"):
-        rows += legion_sharded.run()
+    failures = []
+    for tag, module in modules:
+        if not want(tag):
+            continue
+        try:
+            rows += module.run()
+        except Exception:
+            failures.append(tag)
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} benchmark module(s) FAILED: "
+              f"{', '.join(failures)} ({len(rows)} rows before failure)",
+              file=sys.stderr)
+        sys.exit(1)
     print(f"# {len(rows)} benchmark rows, all paper-headline asserts passed",
           file=sys.stderr)
 

@@ -63,8 +63,9 @@ def main():
         executor = ShardedExecutor() if args.sharded else None
         backend = LegionServeBackend(accel, cfg, params,
                                      executor=executor).attach(eng)
-        print(f"legion backend attached: {accel.name}, projection GEMMs of "
-              f"every step run through a Machine session "
+        print(f"legion backend attached: {accel.name}, every step lowered "
+              f"to a Program (projections + act-to-act attention over the "
+              f"KV context) through a Machine session "
               f"({backend.machine.backend.name} executor)")
 
     rng = np.random.default_rng(0)
@@ -95,12 +96,23 @@ def main():
             print(f"  req {uid}: prefill[{t.prefill_tokens}] + "
                   f"decode[{t.decode_tokens}] -> {t.cycles} cycles, "
                   f"{t.mem_bytes / 1e3:.1f} KB moved")
-        tv, cv = backend.cross_validate(m=1)
+        tv, cv = backend.cross_validate(m=1, contexts=(16,))
         worst = max([e for v in tv for e in v.errors.values()]
                     + [v.rel_err for v in cv])
         assert all(v.ok for v in tv + cv)
-        print(f"  cross-validated vs simulate(): worst error "
-              f"{worst * 100:.2f}% — OK")
+        print(f"  cross-validated vs simulate() ({len(tv)} stage families, "
+              f"attention included): worst error {worst * 100:.2f}% — OK")
+
+        # latency-aware admission: measured decode cycles -> tokens/sec
+        budget = plan(cfg, batch=args.slots, max_seq=args.max_seq,
+                      hbm_bytes_per_chip=16e9, chips=1,
+                      cycles_per_token=s["cycles_per_decode_token"],
+                      freq_hz=accel.freq_hz)
+        print(f"  latency-aware cache budget: "
+              f"{budget.tokens_per_sec:,.0f} tok/s per slot "
+              f"({budget.batch_tokens_per_sec:,.0f} across {args.slots} "
+              f"slots), {budget.seconds_to_fill(args.max_seq) * 1e3:.2f} ms "
+              f"to fill a {args.max_seq}-token window")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,13 @@ from repro.core.config import (
     tpuv4i,
     ws_64,
 )
-from repro.core.simulator import SimReport, compare, simulate
+from repro.core.simulator import (
+    SimReport,
+    StageResult,
+    compare,
+    simulate,
+    simulate_workload,
+)
 from repro.core.sparsity import (
     ZeroTileBook,
     ZTBStats,
@@ -33,14 +39,17 @@ from repro.core.workloads import (
     bitnet_1_58b,
     bitnet_1_58b_kv,
     corner_case_workloads,
+    decode_attention_workloads,
 )
 
 __all__ = [
     "AcceleratorConfig", "Dataflow", "ws_64", "dip_64", "adip_64",
-    "dlegion", "tpuv4i", "SimReport", "simulate", "compare",
+    "dlegion", "tpuv4i", "SimReport", "StageResult", "simulate",
+    "simulate_workload", "compare",
     "ZeroTileBook", "ZTBStats", "ztb_from_weight", "prune_block_structured",
     "csr_block_schedule", "AttentionSpec", "GEMMWorkload",
     "attention_workloads", "bitnet_1_58b", "bitnet_1_58b_kv",
-    "corner_case_workloads", "analytical", "config", "scheduler",
+    "corner_case_workloads", "decode_attention_workloads",
+    "analytical", "config", "scheduler",
     "simulator", "sparsity", "workloads",
 ]

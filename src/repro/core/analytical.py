@@ -93,6 +93,24 @@ def tfu_cycles(cfg: AcceleratorConfig) -> int:
     return cfg.d
 
 
+def boundary_overlap_cycles(
+    prev_stream: int, next_fill: int, next_pipeline: int,
+) -> int:
+    """Cycles hidden at a round boundary between DEPENDENCY-INDEPENDENT
+    rounds: the incoming round's systolic fill + pipeline ramp proceeds
+    under the outgoing round's activation streaming (the same
+    double-buffering that hides weight prefetch — ADiP's shared
+    shifter/accumulator pipeline keeps the array busy while the next tile
+    set fills).  Bounded by the outgoing stream so the overlapped schedule
+    can never beat the work actually streamed; rounds with a data
+    dependency overlap nothing (the incoming operands do not exist yet).
+
+    The single source of the pipelined-executor timing rule
+    (``repro.legion.program.compute_pipeline``).
+    """
+    return max(0, min(next_fill + next_pipeline, prev_stream))
+
+
 # --------------------------------------------------------------------------- #
 # DSE metrics (paper SS III, Figs. 2-4)
 # --------------------------------------------------------------------------- #

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.config import AcceleratorConfig
 from repro.core.workloads import (
@@ -67,7 +67,16 @@ class StagePlan:
         return out
 
 
-def plan_stage(cfg: AcceleratorConfig, w: GEMMWorkload) -> StagePlan:
+def plan_stage(
+    cfg: AcceleratorConfig, w: GEMMWorkload, *, stage: Optional[str] = None,
+) -> StagePlan:
+    """Map one workload onto the Legion grid.
+
+    ``stage`` overrides the plan's stage label (defaults to ``w.stage``) —
+    program graphs use it to give each node a unique name (e.g. per-slot
+    decode attention stages ``attn_score[j]``) so instrument event streams
+    and cycle cells stay distinguishable per node.
+    """
     L = cfg.units
     k_window = cfg.cores * cfg.d
     k_tiles = max(math.ceil(w.k / k_window), 1)
@@ -97,7 +106,7 @@ def plan_stage(cfg: AcceleratorConfig, w: GEMMWorkload) -> StagePlan:
                     multicast_group=group,
                     k_tiles=k_tiles, k_window=k_window,
                 ))
-    return StagePlan(stage=w.stage, mapping=w.mapping,
+    return StagePlan(stage=stage or w.stage, mapping=w.mapping,
                      assignments=assignments, rounds=rounds,
                      weight_bits=w.weight_bits)
 

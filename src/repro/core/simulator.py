@@ -162,9 +162,14 @@ def _simulate_workload(
     # ---- stationary (weight / KV) traffic -------------------------------- #
     # Loaded once per tile; padded to full tile grid.  D-Legion multicasts
     # the stationary KV tiles across the kv_group query heads (SS IV-B).
-    n_pad_total = t.nt * r * cfg.d * (units if mapping == N_PARTITION and
-                                      units > 1 else 1)
-    n_pad_total = min(n_pad_total, max(w.n, t.nt * r * cfg.d))
+    if mapping == N_PARTITION and units > 1:
+        # the memory controller clips every Legion's fetch to the matrix
+        # edge — memory only holds w.n columns, so even a matrix narrower
+        # than one R*D tile (decode-shaped act-to-act stages, N = context)
+        # moves w.n columns, not a padded tile
+        n_pad_total = min(t.nt * r * cfg.d * units, w.n)
+    else:
+        n_pad_total = t.nt * r * cfg.d
     distinct = w.count / w.kv_group if (units > 1 and w.kv_group > 1) \
         else w.count
     res.weight_bytes = (
@@ -192,6 +197,23 @@ def _simulate_workload(
     return res
 
 
+def simulate_workload(
+    cfg: AcceleratorConfig,
+    w: GEMMWorkload,
+    ztb: Optional[ZTBStats] = None,
+) -> StageResult:
+    """Analytic result of ONE workload, without stage-name aggregation.
+
+    The per-node counterpart ``Machine.run`` validates measured traffic and
+    cycles against: a program may contain several nodes whose workloads
+    share a stage name (e.g. per-slot decode attention), so validation
+    needs the single-workload result, not ``simulate()``'s per-stage sum.
+    ZTB applies to sub-8-bit weight stages only, exactly as in
+    :func:`simulate`.
+    """
+    return _simulate_workload(cfg, w, ztb if w.weight_bits < 8 else None)
+
+
 def simulate(
     cfg: AcceleratorConfig,
     workloads: Iterable[GEMMWorkload],
@@ -199,8 +221,8 @@ def simulate(
 ) -> SimReport:
     stages: Dict[str, StageResult] = {}
     for w in workloads:
-        use_ztb = ztb if w.weight_bits < 8 else None  # ZTB is on weights
-        r = _simulate_workload(cfg, w, use_ztb)
+        r = simulate_workload(cfg, w, ztb)  # ZTB is on sub-8-bit weights
+
         agg = stages.setdefault(w.stage, StageResult(stage=w.stage))
         agg.cycles += r.cycles
         agg.ops += r.ops

@@ -25,6 +25,14 @@ ATTN_OUTPUT = "attn_output"
 OUT_PROJ = "out_proj"
 STAGES = (QKV_PROJ, ATTN_SCORE, ATTN_OUTPUT, OUT_PROJ)
 
+# Split-projection stage names (``repro.legion.program.lower_attention``
+# with ``split_qkv=True``): Q/K/V as three independent workloads, so a
+# program graph exposes their dependency-independence (V is not needed
+# until the attn_output GEMM) to a pipelining executor.
+Q_PROJ = "q_proj"
+K_PROJ = "k_proj"
+V_PROJ = "v_proj"
+
 # Mapping policy per stage (paper SS IV-C):
 #   head_per_unit — each Legion takes one head workload, round-robin
 #   n_partition   — the workload's N dim is split across all Legions
@@ -128,6 +136,29 @@ def attention_workloads(spec: AttentionSpec) -> List[GEMMWorkload]:
             weight_bits=spec.weight_bits, count=1,
             mapping=N_PARTITION, layers=spec.layers,
         ),
+    ]
+
+
+def decode_attention_workloads(
+    *, heads: int, kv_heads: int, head_dim: int, context: int, m: int = 1,
+    layers: int = 1,
+) -> List[GEMMWorkload]:
+    """The act-to-act stages of ONE serving step at a KV context length.
+
+    Decode-shaped when ``m=1`` (one query row per step), prefill-shaped when
+    ``m == context``.  K/N are position-dependent: at context ``t`` the
+    score GEMM is ``[m, hd] @ [hd, t]`` and the output GEMM ``[m, t] @
+    [t, hd]`` — the KV-cache matrices are the stationary operands, shared
+    across each GQA group (multicast reuse factor ``heads / kv_heads``).
+    """
+    if context < 1:
+        raise ValueError(f"context must be >= 1, got {context}")
+    gs = max(heads // max(kv_heads, 1), 1)
+    common = dict(weight_bits=8, count=heads, kv_group=gs,
+                  mapping=N_PARTITION, layers=layers)
+    return [
+        GEMMWorkload(stage=ATTN_SCORE, m=m, k=head_dim, n=context, **common),
+        GEMMWorkload(stage=ATTN_OUTPUT, m=m, k=context, n=head_dim, **common),
     ]
 
 

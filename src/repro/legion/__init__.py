@@ -4,10 +4,16 @@ The subsystem that closes the loop between the repo's three models of
 D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
 
 - machine:  `Machine` session facade — pluggable `Instrument` measurement
-            hooks + `ExecutorBackend` numerics (in-process or sharded
-            device-parallel over a JAX mesh axis)
+            hooks + `ExecutorBackend` numerics (in-process, sharded
+            device-parallel over a JAX mesh axis, or pipelined over a
+            program's dependency levels)
+- program:  `Program` stage graphs — named GEMM nodes with explicit data
+            dependencies and operand sources (streamed act / stationary
+            weight / stationary act for K-V), attention + serve-step
+            lowering builders, the overlapped-round pipeline model, and a
+            pure-NumPy reference execution
 - runtime:  plan coverage validation, operand synthesis, deprecated
-            `execute_plan`/`execute_workload` shims
+            `execute_plan`/`execute_workload` shims (removal: PR 6)
 - modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
 - trace:    NoC-dedup traffic measurement + simulate() cross-validation
 - latency:  cycle counting (fill/stream/drain/prefetch) + eq.-2 cross-val
@@ -25,6 +31,7 @@ from repro.legion.machine import (
     InProcessExecutor,
     Instrument,
     Machine,
+    PipelinedExecutor,
     RunReport,
     ShardedExecutor,
     prepare_context,
@@ -32,6 +39,21 @@ from repro.legion.machine import (
     validate_options,
 )
 from repro.legion.modes import ModeSpec, select_mode
+from repro.legion.program import (
+    PipelineReport,
+    Program,
+    ProgramError,
+    ProgramReport,
+    ProgramStage,
+    Ref,
+    compute_pipeline,
+    lower_attention,
+    lower_serve_step,
+    reference_outputs,
+    requantize_int8,
+    softmax_int8,
+    swiglu_int8,
+)
 from repro.legion.runtime import (
     ExecutionResult,
     PlanCoverageError,
@@ -58,19 +80,33 @@ __all__ = [
     "Instrument",
     "Machine",
     "ModeSpec",
+    "PipelineReport",
+    "PipelinedExecutor",
     "PlanCoverageError",
+    "Program",
+    "ProgramError",
+    "ProgramReport",
+    "ProgramStage",
+    "Ref",
     "RunReport",
     "ShardedExecutor",
     "StageValidation",
     "TrafficTotals",
     "TrafficTracer",
+    "compute_pipeline",
     "cross_validate",
     "cross_validate_cycles",
     "execute_plan",
     "execute_workload",
+    "lower_attention",
+    "lower_serve_step",
     "prepare_context",
+    "reference_outputs",
+    "requantize_int8",
     "run_assignment_loop",
     "select_mode",
+    "softmax_int8",
+    "swiglu_int8",
     "synthesize_operands",
     "total_cycle_error",
     "validate_coverage",

@@ -143,12 +143,30 @@ class CycleCounter:
         )
 
     # ------------------------------------------------------------------ #
+    def round_criticals(self) -> Dict[str, List[CycleBreakdown]]:
+        """Per-stage list of each round's critical (slowest-Legion) path,
+        in round order.
+
+        The per-round resolution the pipelined program executor schedules
+        with (``repro.legion.program.compute_pipeline``): rounds of
+        dependency-independent stages interleave, and the breakdown's
+        ``stream``/``fill``/``pipeline`` terms decide how much of an
+        incoming round hides under the outgoing one.  Summing a stage's
+        rounds reproduces :meth:`stage_breakdown` exactly.
+        """
+        out: Dict[str, List[CycleBreakdown]] = {}
+        for (stage, _rnd), legions in sorted(self._cells.items()):
+            crit = max(legions.values(), key=lambda b: b.total)
+            out.setdefault(stage, []).append(crit)
+        return out
+
     def stage_breakdown(self) -> Dict[str, CycleBreakdown]:
         """Per-stage breakdown of the critical (slowest-Legion) path."""
         out: Dict[str, CycleBreakdown] = {}
-        for (stage, _rnd), legions in sorted(self._cells.items()):
-            crit = max(legions.values(), key=lambda b: b.total)
-            out.setdefault(stage, CycleBreakdown()).add(crit)
+        for stage, rounds in self.round_criticals().items():
+            agg = out.setdefault(stage, CycleBreakdown())
+            for crit in rounds:
+                agg.add(crit)
         return out
 
     def stage_cycles(self) -> Dict[str, int]:

@@ -30,18 +30,32 @@ core grouping):
 outputs, measured bytes, counted cycles, and (for workload runs) the
 per-stage validation against ``simulate()`` — one object instead of four
 hand-wired ones.
+
+The unit of execution is the **stage graph**
+(:class:`~repro.legion.program.Program`): ``Machine.run(program)`` executes
+the nodes in dependency order, threading inter-stage outputs through the
+graph's refs (score -> softmax -> output) and firing stage-boundary
+instrument events; legacy single-plan calls become one-node programs.
+:class:`PipelinedExecutor` overlaps rounds of dependency-independent
+stages, reporting overlapped cycles that are always <= the serial
+per-stage sum (exactly equal on a chain).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
+from typing import (
+    TYPE_CHECKING, Dict, Hashable, List, Optional, Sequence, Tuple, Union,
+)
 
 import numpy as np
 
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.legion.program import Program, ProgramReport, ProgramStage
+
 from repro.core.config import AcceleratorConfig
 from repro.core.scheduler import Assignment, StagePlan, plan_stage
-from repro.core.simulator import simulate
+from repro.core.simulator import simulate, simulate_workload
 from repro.core.sparsity import ZeroTileBook, ZTBStats
 from repro.core.workloads import GEMMWorkload, N_PARTITION
 from repro.kernels import dense_tile_gemm
@@ -97,21 +111,48 @@ def validate_options(
 # --------------------------------------------------------------------------- #
 
 class Instrument:
-    """Event hooks a plan execution fires, in a fixed documented order.
+    """Event hooks a run fires, in a fixed documented order.
 
-    Per run: ``on_plan_begin`` once, then per assignment (sorted by
-    (round, legion)) and per (K-window, N-tile) pass either
+    Every run executes a :class:`~repro.legion.program.Program` (legacy
+    single-plan calls become a one-node program), so the stream is:
 
-    * ``on_window_skip`` — the window is ZTB fully-sparse: no fetch, no
-      psum round, no compute; or
-    * ``on_weight_fetch`` -> ``on_act_stream`` -> ``on_psum`` ->
-      ``on_pass`` — one executed pass (the tracer deduplicates repeated
-      fetch keys itself; every event fires regardless),
+    ``on_program_begin`` once, then **per stage in topological order**:
 
-    then ``on_assignment_end`` once per assignment, and ``on_plan_end``
-    once.  Subclass and override what you need — every hook is a no-op —
-    or duck-type: missing hooks are skipped.
+    * ``on_stage_begin`` — the stage boundary (node name, topological
+      index, dependency names);
+    * ``on_plan_begin`` once, then per assignment (sorted by (round,
+      legion)) and per (K-window, N-tile) pass either
+
+      - ``on_window_skip`` — the window is ZTB fully-sparse: no fetch, no
+        psum round, no compute; or
+      - ``on_weight_fetch`` -> ``on_act_stream`` -> ``on_psum`` ->
+        ``on_pass`` — one executed pass (the tracer deduplicates repeated
+        fetch keys itself; every event fires regardless),
+
+      then ``on_assignment_end`` once per assignment, and ``on_plan_end``
+      once;
+    * ``on_stage_end`` — the stage's outputs are final (inter-stage
+      threading resolves refs against them next);
+
+    and ``on_program_end`` once with every stage's outputs.  Session
+    instruments and caller-passed per-run instruments receive the whole
+    stream; the per-stage fresh tracer/counter pair sees only its own
+    stage's plan events.  Subclass and override what you need — every
+    hook is a no-op — or duck-type: missing hooks are skipped.
     """
+
+    def on_program_begin(self, program) -> None:
+        """A validated Program is about to execute (once per run)."""
+
+    def on_stage_begin(self, *, stage: str, index: int,
+                       deps: Tuple[str, ...]) -> None:
+        """A program stage is about to execute (topological order)."""
+
+    def on_stage_end(self, *, stage: str, outputs: np.ndarray) -> None:
+        """A program stage's ``[count, M, N]`` outputs are final."""
+
+    def on_program_end(self, outputs: Dict[str, np.ndarray]) -> None:
+        """The whole program finished; per-stage outputs by node name."""
 
     def on_plan_begin(self, plan: StagePlan, mode: ModeSpec,
                       ctx: "ExecContext") -> None:
@@ -608,6 +649,33 @@ class ShardedExecutor(ExecutorBackend):
         return out
 
 
+class PipelinedExecutor(ExecutorBackend):
+    """Overlaps rounds of dependency-independent program stages.
+
+    Numerics delegate to an ``inner`` executor (default
+    :class:`InProcessExecutor`; pass ``ShardedExecutor()`` for
+    device-parallel math) — the pipelining is a *timing* transformation:
+    ``Machine.run(program)`` feeds every stage's per-round critical paths
+    (:meth:`~repro.legion.latency.CycleCounter.round_criticals`) into
+    :func:`repro.legion.program.compute_pipeline`, which interleaves
+    rounds within each dependency level and hides the incoming round's
+    systolic fill + pipeline ramp under the outgoing round's streaming.
+    The resulting :class:`~repro.legion.program.PipelineReport` rides on
+    the :class:`~repro.legion.program.ProgramReport`; overlapped cycles
+    are always <= the serial per-stage sum (exactly equal on a chain),
+    and the serial sum itself cross-validates against ``simulate()``.
+    """
+
+    name = "pipelined"
+
+    def __init__(self, inner: Optional[ExecutorBackend] = None) -> None:
+        self.inner = inner if inner is not None else InProcessExecutor()
+
+    def execute(self, ctx: ExecContext,
+                instruments: Sequence[object]) -> np.ndarray:
+        return self.inner.execute(ctx, instruments)
+
+
 # --------------------------------------------------------------------------- #
 # RunReport
 # --------------------------------------------------------------------------- #
@@ -748,7 +816,7 @@ class Machine:
     # ------------------------------------------------------------------ #
     def run(
         self,
-        work: Union[GEMMWorkload, StagePlan],
+        work: Union[GEMMWorkload, StagePlan, "Program"],
         x: Optional[np.ndarray] = None,
         w: Optional[np.ndarray] = None,
         *,
@@ -760,65 +828,179 @@ class Machine:
         validate: Optional[bool] = None,
         rtol: float = 0.05,
         instruments: Optional[Sequence[object]] = None,
-    ) -> RunReport:
-        """Execute a workload (planned + synthesized for you) or an explicit
-        (plan, x, w) triple through the machine's backend.
+    ) -> Union[RunReport, "ProgramReport"]:
+        """Execute a :class:`~repro.legion.program.Program`, a workload
+        (planned + synthesized for you), or an explicit (plan, x, w)
+        triple through the machine's backend.
 
-        Every run checks outputs against the dense ``x @ w`` reference
+        A Program run returns a :class:`~repro.legion.program
+        .ProgramReport` (per-stage RunReports in topological order,
+        inter-stage outputs threaded through the graph's refs, plus a
+        :class:`~repro.legion.program.PipelineReport` under a
+        :class:`PipelinedExecutor` backend).  Workload and plan calls are
+        the thin single-node shim: they become a one-node program and
+        return that node's :class:`RunReport`, exactly as before.
+
+        Every stage checks outputs against the dense ``x @ w`` reference
         (bit-exact on the integer path, allclose on float) unless
         ``check_outputs=False`` or caller-supplied ZTB books gate the
-        outputs away from the reference.  Workload runs additionally
-        cross-validate
-        measured traffic/cycles against ``simulate()`` for the workload's
-        stage (``rtol``).  ``validate``: ``None`` (default)
-        validates when the run's measuring instruments are its own fresh
-        pair and ``simulate()`` models the run; ``True`` requires validation
+        outputs away from the reference.  Workload stages additionally
+        cross-validate measured traffic/cycles against ``simulate()``
+        (``rtol``).  ``validate``: ``None`` (default) validates when the
+        stage's measuring instruments are its own fresh pair and
+        ``simulate()`` models the run; ``True`` requires validation
         (raises if the per-run instruments lack a tracer/counter, or the
         run has no analytic counterpart); ``False`` skips it.
         """
+        from repro.legion.program import Program
+
+        if isinstance(work, Program):
+            if x is not None or w is not None:
+                raise ValueError(
+                    "a Program carries its own operands; drop the x/w "
+                    "arguments"
+                )
+            if mode is not None or ztb not in (None, False) or ztb_sparsity:
+                raise ValueError(
+                    "mode / ztb / ztb_sparsity are per-stage options; set "
+                    "them on the ProgramStages"
+                )
+            return self.run_program(
+                work, seed=seed, check_outputs=check_outputs,
+                validate=validate, rtol=rtol, instruments=instruments,
+            )
+        program = Program.single(work, x, w, mode=mode, ztb=ztb,
+                                 ztb_sparsity=ztb_sparsity)
+        report = self.run_program(
+            program, seed=seed, check_outputs=check_outputs,
+            validate=validate, rtol=rtol, instruments=instruments,
+        )
+        return report.stage_reports[program.stages[0].name]
+
+    # ------------------------------------------------------------------ #
+    def run_program(
+        self,
+        program: "Program",
+        *,
+        seed: int = 0,
+        check_outputs: bool = True,
+        validate: Optional[bool] = None,
+        rtol: float = 0.05,
+        instruments: Optional[Sequence[object]] = None,
+    ) -> "ProgramReport":
+        """Execute every stage of ``program`` in topological order,
+        threading inter-stage outputs through the graph's refs and firing
+        the stage-boundary instrument events (see :class:`Instrument`).
+
+        Under a :class:`PipelinedExecutor` backend the report additionally
+        carries the overlapped-round :class:`~repro.legion.program
+        .PipelineReport` computed from each stage's per-round critical
+        paths.
+        """
+        from repro.legion.program import (
+            ProgramReport, compute_pipeline,
+        )
+
+        program.validate()
+        caller = list(instruments) if instruments is not None else None
+        if validate and caller is not None and len(program) > 1:
+            raise ValueError(
+                "validate=True with caller-passed instruments cannot "
+                "validate a multi-stage program per stage (the instruments' "
+                "totals span stages); use the default per-stage instruments"
+            )
+        shared: List[object] = (caller or []) + self.instruments
+        _each(shared, "on_program_begin", program)
+        produced: Dict[str, np.ndarray] = {}
+        reports: Dict[str, RunReport] = {}
+        for idx, stage in enumerate(program.topo_order()):
+            _each(shared, "on_stage_begin", stage=stage.name, index=idx,
+                  deps=stage.deps)
+            rep = self._run_stage(
+                stage, produced, seed=seed, check_outputs=check_outputs,
+                validate=validate, rtol=rtol, caller_instruments=caller,
+                bind_caller=len(program) == 1,
+            )
+            produced[stage.name] = rep.outputs
+            reports[stage.name] = rep
+            _each(shared, "on_stage_end", stage=stage.name,
+                  outputs=rep.outputs)
+
+        pipeline = None
+        # caller-passed instruments span the whole program — their cycle
+        # cells mix every stage's rounds, so only the default per-stage
+        # fresh counters can feed the overlap schedule
+        if isinstance(self.backend, PipelinedExecutor) and caller is None:
+            rounds: Optional[Dict[str, List[CycleBreakdown]]] = {}
+            for name, rep in reports.items():
+                if rep.cycles is None:
+                    rounds = None    # no per-stage counters to schedule with
+                    break
+                rc = rep.cycles.round_criticals()
+                rounds[name] = [b for key in sorted(rc) for b in rc[key]]
+            if rounds is not None:
+                pipeline = compute_pipeline(program, rounds)
+
+        preport = ProgramReport(
+            program=program, stage_reports=reports,
+            backend=self.backend.name, pipeline=pipeline,
+        )
+        _each(shared, "on_program_end", preport.outputs)
+        return preport
+
+    # ------------------------------------------------------------------ #
+    def _run_stage(
+        self,
+        stage: "ProgramStage",
+        produced: Dict[str, np.ndarray],
+        *,
+        seed: int,
+        check_outputs: bool,
+        validate: Optional[bool],
+        rtol: float,
+        caller_instruments: Optional[List[object]],
+        bind_caller: bool = True,
+    ) -> RunReport:
+        """One program node: resolve operands (refs against ``produced``),
+        prepare, execute, check, validate — the former ``run`` body.
+
+        ``bind_caller``: whether a caller-passed tracer/counter may bind to
+        this stage's report.  True only for one-node programs — in a
+        multi-stage program the caller's instruments accumulate across
+        stages, and binding them per stage would overcount every stage's
+        traffic/cycles by the program prefix.
+        """
+        from repro.legion.program import Ref
         from repro.legion.runtime import _instance_view, synthesize_operands
 
-        workload: Optional[GEMMWorkload] = None
-        if isinstance(work, GEMMWorkload):
-            workload = work
-            plan = plan_stage(self.cfg, work)
-            if x is None and w is None:
+        workload = stage.workload
+        ztb = stage.ztb
+        if workload is not None:
+            plan = plan_stage(self.cfg, workload, stage=stage.name)
+            if stage.x is None and stage.w is None:
                 x, w = synthesize_operands(
-                    work, seed=seed, ztb_sparsity=ztb_sparsity,
+                    workload, seed=seed, ztb_sparsity=stage.ztb_sparsity,
                     k_window=(plan.assignments[0].k_window
                               if plan.assignments else 0),
                 )
-                if ztb is None and ztb_sparsity > 0.0:
+                if ztb is None and stage.ztb_sparsity > 0.0:
                     ztb = True
-            elif x is None or w is None:
-                raise ValueError("pass both x and w, or neither")
-            elif ztb_sparsity:
-                raise ValueError(
-                    "ztb_sparsity prunes *synthesized* operands; with "
-                    "explicit x and w, prune the weights yourself and pass "
-                    "ztb=True (or pre-built books)"
-                )
-        elif isinstance(work, StagePlan):
-            if ztb_sparsity:
-                raise ValueError(
-                    "ztb_sparsity synthesizes operands and only applies to "
-                    "workload runs; pass ztb= for an explicit plan"
-                )
-            plan = work
-            if x is None or w is None:
-                raise ValueError("Machine.run(plan, ...) needs explicit "
-                                 "x and w operands")
+            else:
+                x, w = stage.x, stage.w
         else:
-            raise TypeError(
-                f"expected GEMMWorkload or StagePlan, got "
-                f"{type(work).__name__}"
-            )
+            plan = stage.plan
+            x, w = stage.x, stage.w
+        if isinstance(x, Ref):
+            x = x.resolve(produced)
+        if isinstance(w, Ref):
+            w = w.resolve(produced)
 
         ctx = prepare_context(
-            self.cfg, plan, x, w, mode=mode, ztb=ztb,
+            self.cfg, plan, x, w, mode=stage.mode, ztb=ztb,
             granularity=self.granularity, kernel_backend=self.kernel_backend,
             emulate_cores=self.emulate_cores, accumulators=self.accumulators,
         )
+        instruments = caller_instruments
         # Per-run instruments (fresh pair, or the caller's) come first; the
         # report's trace/cycles bind to them, never to session-lifetime
         # instruments whose totals span earlier runs.
@@ -836,10 +1018,12 @@ class Machine:
         outputs = self.backend.execute(ctx, emit)
         _each(emit, "on_plan_end", outputs)
 
-        tracer = next((i for i in per_run if isinstance(i, TrafficTracer)),
-                      None)
-        counter = next((i for i in per_run if isinstance(i, CycleCounter)),
-                       None)
+        tracer = counter = None
+        if caller_instruments is None or bind_caller:
+            tracer = next(
+                (i for i in per_run if isinstance(i, TrafficTracer)), None)
+            counter = next(
+                (i for i in per_run if isinstance(i, CycleCounter)), None)
 
         # Caller-supplied books may gate windows whose data is NOT zero —
         # outputs then intentionally diverge from the dense reference, so
@@ -900,13 +1084,13 @@ class Machine:
                     )
             if measurable and models_run and \
                     (validate or instruments is None):
-                sim = simulate(self.cfg, [workload],
-                               ztb=report.ztb_stats).stages[workload.stage]
+                sim = simulate_workload(self.cfg, workload,
+                                        ztb=report.ztb_stats)
                 scale = workload.layers
                 br = counter.stage_breakdown().get(
                     plan.stage, CycleBreakdown()).scaled(scale)
                 report.traffic_validation, report.cycle_validation = \
-                    _build_validations(workload.stage,
+                    _build_validations(plan.stage,
                                        tracer.totals.scaled(scale), br, sim,
                                        rtol)
         return report

@@ -15,6 +15,10 @@ This module keeps the pieces that are not session state:
 * :func:`execute_plan` / :func:`execute_workload` — **deprecated** shims
   that delegate to ``Machine`` and emit ``DeprecationWarning``; use
   ``Machine(cfg).run(...)`` instead.
+
+Removal timeline: the shims shipped deprecated in PR 3 and are scheduled
+for removal in **PR 6** (two PRs after the PR-4 Program API redesign) —
+migrate callers to ``Machine.run`` before then.
 """
 from __future__ import annotations
 
@@ -172,8 +176,9 @@ def execute_plan(
     ``cycles`` attached as instruments.
     """
     warnings.warn(
-        "execute_plan is deprecated; use repro.legion.Machine(cfg).run(plan,"
-        " x, w) — instruments replace the tracer=/cycles= kwargs",
+        "execute_plan is deprecated (removal: PR 6); use repro.legion"
+        ".Machine(cfg).run(plan, x, w) — instruments replace the "
+        "tracer=/cycles= kwargs",
         DeprecationWarning, stacklevel=2,
     )
     from repro.legion.machine import Machine
@@ -255,9 +260,9 @@ def execute_workload(
     :class:`~repro.legion.machine.Machine` session.
     """
     warnings.warn(
-        "execute_workload is deprecated; use repro.legion.Machine(cfg)"
-        ".run(workload) — the RunReport carries traffic, cycles, and "
-        "validation",
+        "execute_workload is deprecated (removal: PR 6); use repro.legion"
+        ".Machine(cfg).run(workload) — the RunReport carries traffic, "
+        "cycles, and validation",
         DeprecationWarning, stacklevel=2,
     )
     from repro.legion.machine import Machine

@@ -81,7 +81,11 @@ class ServeEngine:
         # repro.serve.legion_backend drives the projection GEMMs of each
         # step through the Legion runtime for traffic/cycle tallies).
         #   {"kind": "prefill", "uid": int, "tokens": prompt_len}
-        #   {"kind": "decode",  "uids": [int, ...], "tokens": 1}
+        #   {"kind": "decode",  "uids": [int, ...], "tokens": 1,
+        #    "positions": [int, ...]}   # per-slot cache write position —
+        #                               # the step attended pos+1 entries
+        #                               # (context length for act-to-act
+        #                               # attention lowering)
         self.step_observers: List[Callable[[dict], None]] = []
         self._decode = jax.jit(
             lambda params, tok, cache, pos: api.decode(params, tok, cache,
@@ -156,7 +160,8 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos)
         )
         self._notify({"kind": "decode", "tokens": 1,
-                      "uids": [self.slots[i].request.uid for i in active]})
+                      "uids": [self.slots[i].request.uid for i in active],
+                      "positions": [int(self.slots[i].pos) for i in active]})
         next_tok = np.asarray(self._sample(logits[:, -1]))
         for i in active:
             slot = self.slots[i]

@@ -1,12 +1,20 @@
-"""KV-cache utilities: size accounting + sliding-window (ring) option.
+"""KV-cache utilities: size accounting + latency-aware capacity planning.
 
 The cache layouts themselves live with their models (models.attention.KVCache,
 models.mamba2.SSMCache, models.hybrid.HybridCache); this module provides the
 capacity planning the serving engine and the dry-run memory analysis use.
+
+Admission control is latency-aware: feed the measured per-token decode
+cycles from ``repro.serve.legion_backend.LegionServeBackend.summary()``
+(``cycles_per_decode_token``) plus the accelerator clock into :func:`plan`
+and the :class:`CacheBudget` carries the sustainable decode rate — the
+scheduler can then refuse batches whose token demand outruns what the
+measured serve path delivers, not just what fits in HBM.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -14,6 +22,16 @@ class CacheBudget:
     bytes_per_token: int     # across all layers
     total_bytes: int
     fits_hbm: bool
+    # Latency-aware fields (None without measured cycles): the decode rate
+    # the accelerator sustains per slot, and across the planned batch.
+    tokens_per_sec: Optional[float] = None       # one decode stream
+    batch_tokens_per_sec: Optional[float] = None  # batch slots decoding
+
+    def seconds_to_fill(self, max_seq: int) -> Optional[float]:
+        """Time to decode one slot's window at the measured rate."""
+        if not self.tokens_per_sec:
+            return None
+        return max_seq / self.tokens_per_sec
 
 
 def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
@@ -28,14 +46,40 @@ def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
 
 
 def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
-         chips: int, dtype_bytes: int = 2) -> CacheBudget:
+         chips: int, dtype_bytes: int = 2,
+         cycles_per_token: Optional[float] = None,
+         freq_hz: Optional[float] = None) -> CacheBudget:
+    """Capacity (and optionally latency) budget for a serving deployment.
+
+    ``cycles_per_token`` is a *measured* per-token decode cost (e.g.
+    ``LegionServeBackend.summary()["cycles_per_decode_token"]``) at clock
+    ``freq_hz`` (e.g. ``AcceleratorConfig.freq_hz``); both together add the
+    tokens/sec fields to the budget.  Passing one without the other is an
+    error — a cycle count without a clock is not a rate.
+    """
+    if (cycles_per_token is None) != (freq_hz is None):
+        raise ValueError(
+            "pass cycles_per_token and freq_hz together (a measured cycle "
+            "count needs a clock to become a rate)"
+        )
     bpt = kv_bytes_per_token(cfg, dtype_bytes)
     total = bpt * batch * max_seq
     if cfg.family in ("ssm", "hybrid"):
         di, n = cfg.d_inner, cfg.ssm_state
         total += (di * n // max(cfg.ssm_head_dim, 1) * cfg.ssm_head_dim
                   * 4 * batch * cfg.layers)
+    tps = None
+    batch_tps = None
+    if cycles_per_token is not None:
+        if cycles_per_token <= 0 or freq_hz <= 0:
+            raise ValueError(
+                f"cycles_per_token={cycles_per_token} and freq_hz={freq_hz} "
+                f"must be > 0"
+            )
+        tps = freq_hz / cycles_per_token
+        batch_tps = tps * batch
     return CacheBudget(
         bytes_per_token=bpt, total_bytes=total,
         fits_hbm=total <= hbm_bytes_per_chip * chips,
+        tokens_per_sec=tps, batch_tokens_per_sec=batch_tps,
     )

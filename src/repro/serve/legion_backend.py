@@ -2,44 +2,62 @@
 
 The serving engine runs whole-model jitted JAX steps; the accelerator models
 never saw them.  This bridge closes that gap the way TensorRT-LLM routes
-per-step projection GEMMs through an accelerator backend: it extracts the
-projection matrices (``wq/wk/wv/wo`` and the SwiGLU ``w1/w2/w3``) from the
-engine's params, lowers every prefill / decode step to scheduler
-:class:`~repro.core.scheduler.StagePlan`\\ s, and drives them through a
-:class:`~repro.legion.machine.Machine` session — so traced serving traffic
-produces measured **byte and cycle tallies per request**, cross-validatable
-against ``simulate()`` on the very same workloads.  Pass ``executor=`` (any
-:class:`~repro.legion.machine.ExecutorBackend`, e.g. ``ShardedExecutor``)
-to choose where the step GEMMs physically run.
+per-step GEMMs through an engine graph: it extracts the projection matrices
+(``wq/wk/wv/wo`` and the SwiGLU ``w1/w2/w3``) from the engine's params and
+lowers every prefill / decode step to **one**
+:class:`~repro.legion.program.Program` — the projection stages *and* the
+act-to-act attention stages, with each slot's KV-cache matrices as
+stationary activation operands whose K/N depend on the slot's position
+(context length ``t`` at decode) and GQA groups sharing one multicast
+fetch.  The program executes through a
+:class:`~repro.legion.machine.Machine` session, so traced serving traffic
+produces measured **byte and cycle tallies per request covering the full
+step**, cross-validatable against ``simulate()`` on the very same
+workloads.  Pass ``executor=`` (any
+:class:`~repro.legion.machine.ExecutorBackend`, e.g. ``ShardedExecutor``
+or ``PipelinedExecutor``) to choose how the step programs run.
 
 One representative layer executes numerically (the weights are the engine's
 actual ternary-quantized matrices, re-extracted to int8); tallies scale by
 the model's layer count — the same one-layer-times-L convention as
-``repro.legion.trace.cross_validate``.  Activations are synthetic int8
-(the engine's real activations live inside the jitted graph), so the GEMMs
-are numerically real — every output is checked against the plain ``x @ w``
-reference — while the *shapes, weights, plans, traffic, and cycles* are the
-serving step's own.
+``repro.legion.trace.cross_validate``.  The streamed input and the KV cache
+are synthetic int8 (the engine's real activations live inside the jitted
+graph), but the intermediate activations thread through the program graph
+(qkv -> score -> softmax -> output -> O-proj -> SwiGLU mlp), so the GEMMs
+are numerically real — every stage output is checked against the plain
+``x @ w`` reference — while the *shapes, weights, plans, dependencies,
+traffic, and cycles* are the serving step's own.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.config import AcceleratorConfig
 from repro.core.simulator import simulate
 from repro.core.workloads import (
+    ATTN_OUTPUT,
+    ATTN_SCORE,
     GEMMWorkload,
     HEAD_PER_UNIT,
     N_PARTITION,
     OUT_PROJ,
     QKV_PROJ,
+    decode_attention_workloads,
 )
 from repro.legion.latency import CycleValidation
 from repro.legion.machine import ExecutorBackend, Machine
+from repro.legion.program import (
+    STATIONARY_ACT,
+    Program,
+    ProgramStage,
+    Ref,
+    lower_serve_step,
+    softmax_int8,
+)
 from repro.legion.trace import StageValidation, TrafficTotals
 
 # Serve-side stage names beyond the paper's four attention stages: the
@@ -211,23 +229,34 @@ def extract_projection_ops(
 
 
 class LegionServeBackend:
-    """Drives a ServeEngine's per-step projection GEMMs through the runtime.
+    """Drives a ServeEngine's per-step GEMMs through the runtime.
 
     Attach to an engine (``backend.attach(engine)``) and every prefill /
-    decode step is lowered to StagePlans and executed.  Two views
+    decode step is lowered to one :class:`~repro.legion.program.Program`
+    (projections AND, with ``attention=True``, the act-to-act attention
+    stages over each slot's KV context) and executed.  Two views
     accumulate:
 
     * :attr:`totals` — **batch-accurate** engine-level totals: a batched
       decode over A active slots executes as one ``m=A`` step (stationary
-      weights fetched once for the whole batch, like the hardware would);
+      weights fetched once for the whole batch, like the hardware would),
+      with one per-slot attention pair at each slot's own context length;
     * :attr:`per_request` — per-request **standalone** costs: each decode
-      token is attributed its own ``m=1`` step, as if the request were
-      served alone.  Summing per-request tallies therefore *exceeds*
-      ``totals`` whenever requests share a decode batch — that headroom is
-      exactly the batching win, not double-counted hardware work.
+      token is attributed its own ``m=1`` step at that token's context,
+      as if the request were served alone.  Summing per-request tallies
+      therefore *exceeds* ``totals`` whenever requests share a decode
+      batch — that headroom is exactly the batching win, not
+      double-counted hardware work.
 
-    Step executions are cached by row count ``m``: the weights are fixed,
-    so each distinct batch shape executes once.
+    Step tallies are cached compositionally: the context-independent
+    projection part by row count ``m``, the attention pair by
+    ``(rows, context)``, and the composed step by ``(m, contexts)`` —
+    byte/cycle identical to executing the step's single Program (fresh
+    per-stage instruments mean nothing dedups across stages), but a
+    decode stream whose context advances every token re-executes only
+    the two attention GEMMs, not the dominant projection/MLP stages.
+    :meth:`step_program` still lowers the whole step to one graph (for
+    the pipelined executor, or any caller wanting the full DAG).
     """
 
     def __init__(
@@ -241,6 +270,7 @@ class LegionServeBackend:
         check_outputs: bool = True,
         mem_bw_bytes_per_cycle: float = math.inf,
         executor: Optional[ExecutorBackend] = None,
+        attention: bool = True,
     ) -> None:
         self.cfg = accel_cfg
         self.model_cfg = model_cfg
@@ -248,6 +278,11 @@ class LegionServeBackend:
         self.seed = seed
         self.check_outputs = check_outputs
         self.mem_bw = mem_bw_bytes_per_cycle
+        self.attention = attention
+        self.heads = model_cfg.n_heads
+        self.kv_heads = model_cfg.kv_heads
+        self.head_dim = model_cfg.head_dim_
+        self.layers = model_cfg.layers
         # One Machine session serves every step; swap `executor` for e.g.
         # repro.legion.ShardedExecutor to run steps device-parallel.
         self.machine = Machine(
@@ -258,7 +293,11 @@ class LegionServeBackend:
         self.totals = StepTally(m=0)     # batch-accurate engine totals
         self.prefill_steps = 0
         self.decode_steps = 0
-        self._step_cache: Dict[int, StepTally] = {}
+        self._step_cache: Dict[Tuple[int, Tuple[int, ...]], StepTally] = {}
+        self._proj_cache: Dict[int, StepTally] = {}          # by m
+        self._attn_cache: Dict[Tuple[int, int], StepTally] = {}  # (rows, t)
+        self._decode_cycles = 0          # standalone per-token accumulation
+        self._decode_tokens = 0
 
     # ------------------------------------------------------------------ #
     def attach(self, engine) -> "LegionServeBackend":
@@ -268,42 +307,81 @@ class LegionServeBackend:
     def on_step(self, event: dict) -> None:
         if event["kind"] == PREFILL:
             self.prefill_steps += 1
-            tally = self.step_tally(event["tokens"])
+            tokens = event["tokens"]
+            # prefill attends over its own prompt: one slot, context = m
+            tally = self.step_tally(tokens, self._ctx((tokens,)))
             self.totals.merge(tally)
             req = self._request(event["uid"])
-            req.prefill_tokens += event["tokens"]
+            req.prefill_tokens += tokens
             req.add(tally)
         elif event["kind"] == DECODE:
             self.decode_steps += 1
-            # engine view: one batched m=len(uids) step
-            self.totals.merge(self.step_tally(len(event["uids"])))
-            # request view: each token's standalone m=1 cost
-            tally = self.step_tally(1)
-            for uid in event["uids"]:
+            uids = event["uids"]
+            positions = event.get("positions", ())
+            # context at this step: the cache holds pos entries and the
+            # step writes + attends position pos -> t = pos + 1
+            contexts = tuple(p + 1 for p in positions) \
+                if len(positions) == len(uids) else (1,) * len(uids)
+            # engine view: one batched m=len(uids) step (canonical slot
+            # order so permuted batches share a cache entry)
+            self.totals.merge(
+                self.step_tally(len(uids), self._ctx(tuple(sorted(contexts))))
+            )
+            # request view: each token's standalone m=1 cost at its context
+            for uid, t in zip(uids, contexts):
+                tally = self.step_tally(1, self._ctx((t,)))
                 req = self._request(uid)
                 req.decode_tokens += 1
                 req.add(tally)
+                self._decode_cycles += tally.cycles
+                self._decode_tokens += 1
 
     def _request(self, uid: int) -> RequestTally:
         return self.per_request.setdefault(uid, RequestTally(uid=uid))
 
-    # ------------------------------------------------------------------ #
-    def workloads(self, m: int) -> List[GEMMWorkload]:
-        return [dataclasses.replace(op.workload, m=m) for op in self.ops]
+    def _ctx(self, contexts: Tuple[int, ...]) -> Tuple[int, ...]:
+        return contexts if self.attention else ()
 
-    def step_tally(self, m: int) -> StepTally:
-        """Execute one serving step's GEMMs for ``m`` activation rows
-        (cached — weights are stationary across steps)."""
-        if m in self._step_cache:
-            return self._step_cache[m]
-        rng = np.random.default_rng(self.seed + m)
+    # ------------------------------------------------------------------ #
+    def workloads(
+        self, m: int, contexts: Sequence[int] = (),
+    ) -> List[GEMMWorkload]:
+        """The step's GEMM workloads (projections + per-slot attention) —
+        what :meth:`cross_validate` simulates."""
+        out = [dataclasses.replace(op.workload, m=m) for op in self.ops]
+        contexts = tuple(contexts)
+        if contexts and m % len(contexts):
+            # same constraint lower_serve_step enforces — the analytic
+            # workloads must correspond to an executable step program
+            raise ValueError(
+                f"{m} step rows cannot split over {len(contexts)} slots"
+            )
+        rows = m // len(contexts) if contexts else m
+        for t in contexts:
+            out.extend(decode_attention_workloads(
+                heads=self.heads, kv_heads=self.kv_heads,
+                head_dim=self.head_dim, context=t, m=rows,
+                layers=self.layers,
+            ))
+        return out
+
+    def step_program(self, m: int, contexts: Sequence[int] = ()) -> Program:
+        """Lower one serving step (``m`` rows, per-slot KV contexts) to a
+        Program: projections and attention as one dependency graph."""
+        return lower_serve_step(
+            self.ops, m=m, contexts=self._ctx(tuple(contexts)),
+            heads=self.heads, kv_heads=self.kv_heads,
+            head_dim=self.head_dim, layers=self.layers, seed=self.seed,
+        )
+
+    def _tally_program(self, program: Program, m: int) -> StepTally:
+        """Execute a (sub-)program and fold its stage reports into a tally."""
+        report = self.machine.run(program,
+                                  check_outputs=self.check_outputs,
+                                  validate=False)
         tally = StepTally(m=m)
-        for op in self.ops:
-            w = dataclasses.replace(op.workload, m=m)
-            x = rng.integers(-8, 9, size=(m, w.k)).astype(np.int8)
-            rep = self.machine.run(w, x, op.weights,
-                                   check_outputs=self.check_outputs,
-                                   validate=False)
+        for rep in report.stage_reports.values():
+            w = rep.workload
             cycles = rep.cycles.total_cycles * w.layers
             traffic = rep.trace.totals.scaled(w.layers)
             tally.gemms += 1
@@ -313,21 +391,97 @@ class LegionServeBackend:
             tally.cycles += cycles
             tally.executed_passes += rep.cycles.executed_passes * w.layers
             tally.skipped_passes += rep.cycles.skipped_passes * w.layers
+            # tallies aggregate by workload stage family ("attn_score"),
+            # not per-slot node name ("attn_score[2]")
             agg = tally.stages.setdefault(
                 w.stage, StageTally(traffic=TrafficTotals()))
             agg.traffic.add(traffic)
             agg.cycles += cycles
-        self._step_cache[m] = tally
+        return tally
+
+    def _attention_program(self, rows: int, t: int) -> Program:
+        """The score -> softmax -> output pair alone, at context ``t``:
+        synthetic Q rows and per-group K/V stationary activations — the
+        same shapes, plans, and threading as the full step's attention
+        stages, executable without re-running the projections."""
+        score_wl, out_wl = decode_attention_workloads(
+            heads=self.heads, kv_heads=self.kv_heads,
+            head_dim=self.head_dim, context=t, m=rows, layers=self.layers,
+        )
+        rng = np.random.default_rng((self.seed, rows, t))
+        q = rng.integers(-8, 9, size=(self.heads, rows, self.head_dim)) \
+            .astype(np.int8)
+        kv = rng.integers(
+            -8, 9, size=(2, self.kv_heads, t, self.head_dim)).astype(np.int8)
+        group = np.arange(self.heads) // max(self.heads // self.kv_heads, 1)
+        scale = 1.0 / (8.0 * 8.0 * math.sqrt(self.head_dim))
+        return Program([
+            ProgramStage(
+                name=ATTN_SCORE, workload=score_wl, x=q,
+                w=np.transpose(kv[0], (0, 2, 1))[group],
+                w_source=STATIONARY_ACT,
+            ),
+            ProgramStage(
+                name=ATTN_OUTPUT, workload=out_wl,
+                x=Ref(ATTN_SCORE, lambda o: softmax_int8(o, scale=scale)),
+                w=kv[1][group], w_source=STATIONARY_ACT,
+            ),
+        ])
+
+    def step_tally(
+        self, m: int, contexts: Sequence[int] = (),
+    ) -> StepTally:
+        """One serving step's measured tally for ``m`` activation rows.
+
+        Composed from cached sub-program executions (projections by ``m``,
+        attention by ``(rows, context)``) — identical bytes/cycles to
+        running :meth:`step_program`'s single graph, without re-executing
+        the context-independent stages every time a context advances.
+        """
+        contexts = self._ctx(tuple(contexts))
+        if contexts and m % len(contexts):
+            raise ValueError(
+                f"{m} step rows cannot split over {len(contexts)} slots"
+            )
+        key = (m, contexts)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        if m not in self._proj_cache:
+            self._proj_cache[m] = self._tally_program(
+                lower_serve_step(self.ops, m=m, seed=self.seed), m)
+        parts = [self._proj_cache[m]]
+        rows = m // len(contexts) if contexts else m
+        for t in contexts:
+            akey = (rows, t)
+            if akey not in self._attn_cache:
+                self._attn_cache[akey] = self._tally_program(
+                    self._attention_program(rows, t), rows)
+            parts.append(self._attn_cache[akey])
+        tally = StepTally(m=0)
+        for part in parts:
+            tally.merge(part)
+        tally.m = m
+        self._step_cache[key] = tally
         return tally
 
     # ------------------------------------------------------------------ #
     def cross_validate(
-        self, m: int = 1, *, rtol: float = 0.05,
+        self, m: int = 1, *, contexts: Optional[Sequence[int]] = None,
+        rtol: float = 0.05,
     ) -> Tuple[List[StageValidation], List[CycleValidation]]:
         """Compare a step's measured tallies against ``simulate()`` on the
-        same extracted workloads — the serve-path falsifiability check."""
-        tally = self.step_tally(m)
-        report = simulate(self.cfg, self.workloads(m))
+        same extracted workloads — the serve-path falsifiability check,
+        now covering the act-to-act attention stages too.
+
+        Default ``contexts`` is prefill-shaped (``(m,)``: one slot
+        attending over its own rows); pass e.g. ``contexts=(64,)`` with
+        ``m=1`` for a decode step at context length 64.
+        """
+        if contexts is None:
+            contexts = (m,)
+        contexts = self._ctx(tuple(contexts))
+        tally = self.step_tally(m, contexts)
+        report = simulate(self.cfg, self.workloads(m, contexts))
         traffic_vals: List[StageValidation] = []
         cycle_vals: List[CycleValidation] = []
         for stage, st in tally.stages.items():
@@ -353,11 +507,15 @@ class LegionServeBackend:
         ``cycles``/``*_bytes`` count each batched decode step once at its
         true batch size — the hardware-level total, smaller than the sum of
         the standalone per-request tallies whenever decode steps batched.
+        ``cycles_per_decode_token`` is the mean *standalone* per-token cost
+        over every decoded token (position-dependent attention included) —
+        feed it with ``AcceleratorConfig.freq_hz`` into
+        ``repro.serve.kv_cache.plan`` for a latency-aware cache budget.
         """
         reqs = self.per_request.values()
         decode_tokens = sum(r.decode_tokens for r in reqs)
-        decode_cycles = (self._step_cache[1].cycles
-                         if 1 in self._step_cache else 0)
+        decode_cycles = (self._decode_cycles / self._decode_tokens
+                         if self._decode_tokens else 0.0)
         return {
             "requests": len(self.per_request),
             "prefill_steps": self.prefill_steps,

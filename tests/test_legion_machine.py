@@ -134,7 +134,8 @@ def test_run_input_errors():
     # silently run dense
     with pytest.raises(ValueError, match="ztb_sparsity"):
         Machine(CFG).run(w, x, weights, ztb_sparsity=0.5)
-    with pytest.raises(TypeError, match="GEMMWorkload or StagePlan"):
+    with pytest.raises(TypeError, match="GEMMWorkload, StagePlan, or "
+                                        "Program"):
         Machine(CFG).run("attn_score")
 
 
@@ -234,6 +235,19 @@ class Recording(Instrument):
     def __init__(self):
         self.events = []
 
+    def on_program_begin(self, program):
+        self.events.append(("program_begin", program.names))
+
+    def on_stage_begin(self, **ev):
+        self.events.append(("stage_begin", ev["stage"], ev["index"],
+                            ev["deps"]))
+
+    def on_stage_end(self, **ev):
+        self.events.append(("stage_end", ev["stage"], ev["outputs"].shape))
+
+    def on_program_end(self, outputs):
+        self.events.append(("program_end", tuple(outputs)))
+
     def on_plan_begin(self, plan, mode, ctx):
         self.events.append(("begin", plan.stage, mode.name))
 
@@ -281,6 +295,8 @@ def test_instrument_event_stream_dense():
     abytes = 4 * 128 * 1.0
     psum = 16 * 4 * 4.0
     assert rec.events == [
+        ("program_begin", ("qkv_proj",)),   # one-node program (the shim)
+        ("stage_begin", "qkv_proj", 0, ()),
         ("begin", "qkv_proj", "W8"),
         ("fetch_w", ("w", "qkv_proj", ("inst", 0), 0, 0), wbytes),
         ("stream_a", ("a", "qkv_proj", ("inst", 0), 0, 0), abytes),
@@ -292,6 +308,8 @@ def test_instrument_event_stream_dense():
         ("pass", 1, 0, 16),
         ("assignment", 0, 0, 2, 0),
         ("end", (1, 4, 16)),
+        ("stage_end", "qkv_proj", (1, 4, 16)),
+        ("program_end", ("qkv_proj",)),
     ]
     assert rep.traffic.weight_bytes == 2 * wbytes
 
@@ -307,6 +325,8 @@ def test_instrument_event_stream_with_ztb_skip():
     abytes = 4 * 128 * 1.0
     psum = 16 * 4 * 4.0
     assert rec.events == [
+        ("program_begin", ("qkv_proj",)),
+        ("stage_begin", "qkv_proj", 0, ()),
         ("begin", "qkv_proj", "W8+ZTB"),
         ("skip", 0, 0, 16),                # no fetch, no psum round
         ("fetch_w", ("w", "qkv_proj", ("inst", 0), 1, 0), wbytes),
@@ -315,6 +335,8 @@ def test_instrument_event_stream_with_ztb_skip():
         ("pass", 1, 0, 16),
         ("assignment", 0, 0, 1, 1),
         ("end", (1, 4, 16)),
+        ("stage_end", "qkv_proj", (1, 4, 16)),
+        ("program_end", ("qkv_proj",)),
     ]
     assert rep.ztb_stats.fully_sparse_fraction == pytest.approx(0.5)
     # skipping halved the stationary traffic

@@ -1,9 +1,12 @@
 """Serve-path Legion backend: engine steps executed through the runtime.
 
 The acceptance gate for the serve bridge: a ServeEngine's prefill/decode
-projection GEMMs must lower to StagePlans, execute through the Legion
-runtime bit-exactly, accumulate per-request traffic/cycle tallies, and
-cross-validate against ``simulate()`` on the same workloads.
+steps must lower to one Program each — projection GEMMs AND the act-to-act
+attention stages over each slot's KV context — execute through the Legion
+runtime bit-exactly, accumulate per-request traffic/cycle tallies covering
+the full step, and cross-validate against ``simulate()`` on the same
+workloads.  Measured per-token decode cycles feed ``serve.kv_cache.plan``
+for a latency-aware cache budget.
 """
 import jax
 import numpy as np
@@ -14,6 +17,7 @@ from repro.core import dlegion
 from repro.models import build_model
 from repro.serve import LegionServeBackend, ServeEngine
 from repro.serve.engine import prepare_params
+from repro.serve.kv_cache import plan as kv_plan
 from repro.serve.legion_backend import (
     MLP_DOWN,
     MLP_UP,
@@ -52,10 +56,18 @@ def test_extract_projection_ops_shapes(served):
 
 
 def test_decode_step_cross_validates_traffic_and_cycles(served):
+    """A decode step at context 16: projections + act-to-act attention
+    (KV-cache matrices as stationary operands), all six stage families
+    within tolerance of simulate() on the same workloads."""
     cfg, _api, params = served
     backend = LegionServeBackend(ACCEL, cfg, params)
-    traffic_vals, cycle_vals = backend.cross_validate(m=1, rtol=0.05)
-    assert len(traffic_vals) == len(cycle_vals) == 4
+    traffic_vals, cycle_vals = backend.cross_validate(
+        m=1, contexts=(16,), rtol=0.05)
+    assert len(traffic_vals) == len(cycle_vals) == 6
+    assert {v.stage for v in traffic_vals} == {
+        "qkv_proj", "attn_score", "attn_output", "out_proj",
+        MLP_UP, MLP_DOWN,
+    }
     for v in traffic_vals:
         assert v.ok, str(v)
     for v in cycle_vals:
@@ -63,12 +75,72 @@ def test_decode_step_cross_validates_traffic_and_cycles(served):
         assert v.measured > 0
 
 
+def test_projection_only_backend_keeps_four_stages(served):
+    """attention=False reproduces the PR-2 projection-only tallies."""
+    cfg, _api, params = served
+    backend = LegionServeBackend(ACCEL, cfg, params, attention=False)
+    traffic_vals, cycle_vals = backend.cross_validate(m=1, rtol=0.05)
+    assert len(traffic_vals) == len(cycle_vals) == 4
+    for v in traffic_vals + cycle_vals:
+        assert v.ok, str(v)
+    assert backend.step_tally(1).gemms == 4
+
+
 def test_prefill_step_cross_validates(served):
     cfg, _api, params = served
     backend = LegionServeBackend(ACCEL, cfg, params)
+    # prefill default: one slot attending over its own 24 rows
     traffic_vals, cycle_vals = backend.cross_validate(m=24, rtol=0.05)
+    assert len(traffic_vals) == 6
     for v in traffic_vals + cycle_vals:
         assert v.ok, str(v)
+
+
+def test_composed_tally_equals_full_step_program(served):
+    """step_tally composes cached sub-programs (projections by m,
+    attention by (rows, context)); the result must match executing the
+    step's single Program byte for byte and cycle for cycle — and only
+    the attention pair re-executes as the context advances."""
+    cfg, _api, params = served
+    backend = LegionServeBackend(ACCEL, cfg, params)
+    composed = backend.step_tally(2, (5, 9))
+    full = backend._tally_program(backend.step_program(2, (5, 9)), 2)
+    assert composed.gemms == full.gemms
+    assert composed.cycles == full.cycles
+    assert (composed.weight_bytes, composed.act_bytes, composed.psum_bytes) \
+        == (full.weight_bytes, full.act_bytes, full.psum_bytes)
+    for stage in full.stages:
+        assert composed.stages[stage].cycles == full.stages[stage].cycles
+    # advancing the context reuses the cached projection part
+    backend.step_tally(2, (6, 10))
+    assert set(backend._proj_cache) == {2}
+    assert (1, 5) in backend._attn_cache and (1, 6) in backend._attn_cache
+    with pytest.raises(ValueError, match="slots"):
+        backend.step_tally(3, (4, 5))
+    with pytest.raises(ValueError, match="slots"):
+        backend.workloads(3, (4, 5))
+
+
+def test_attention_cost_grows_with_context(served):
+    """Position-dependent K/N: the same decode token costs more cycles and
+    bytes at a longer context — the admission-control signal."""
+    cfg, _api, params = served
+    backend = LegionServeBackend(ACCEL, cfg, params)
+    short = backend.step_tally(1, (4,))
+    mid = backend.step_tally(1, (48,))
+    # below one K-window / N-tile (128) the array shape hides the growth in
+    # padding: cycles stay flat while stationary bytes already grow
+    assert mid.weight_bytes > short.weight_bytes
+    # crossing the tile boundary adds psum rounds and passes: cycles grow
+    long = backend.step_tally(1, (200,))
+    assert long.cycles > short.cycles
+    assert long.act_bytes > short.act_bytes
+    assert short.gemms == long.gemms == 6
+    # the projection stages are context-independent; attention is the delta
+    for st in ("qkv_proj", MLP_UP, MLP_DOWN):
+        assert short.stages[st].cycles == long.stages[st].cycles
+    assert long.stages["attn_score"].cycles > \
+        short.stages["attn_score"].cycles
 
 
 def test_engine_steps_accumulate_per_request_tallies(served):
@@ -82,7 +154,6 @@ def test_engine_steps_accumulate_per_request_tallies(served):
     assert len(done) == 3
 
     assert set(backend.per_request) == {r.uid for r in reqs}
-    decode_tally = backend.step_tally(1)
     for r in done:
         tally = backend.per_request[r.uid]
         assert tally.prefill_tokens == len(r.prompt)
@@ -90,28 +161,63 @@ def test_engine_steps_accumulate_per_request_tallies(served):
         assert tally.decode_tokens == len(r.output) - 1
         assert tally.cycles > 0
         assert tally.mem_bytes > 0
-        assert tally.cycles == (backend.step_tally(8).cycles
-                                + tally.decode_tokens * decode_tally.cycles)
+        # exact standalone ledger: one prefill step attending its 8-token
+        # prompt, then one m=1 decode step per token at its growing
+        # position-dependent context (9, 10, ... — prompt + decoded so far)
+        expected = backend.step_tally(8, (8,)).cycles + sum(
+            backend.step_tally(1, (t,)).cycles
+            for t in range(9, 9 + tally.decode_tokens)
+        )
+        assert tally.cycles == expected
 
     s = backend.summary()
     assert s["requests"] == 3
     assert s["decode_tokens"] == sum(r.decode_tokens for r in
                                      backend.per_request.values())
-    assert s["cycles_per_decode_token"] == decode_tally.cycles > 0
-    # step executions are cached per row count: prefill m=8, standalone
-    # decode m=1, batched decode m=2 (two slots decoding together)
-    assert set(backend._step_cache) == {1, 2, 8}
-    # engine totals are batch-accurate: 3 prefills + 3 two-wide batched
-    # decode steps + 3 solo decode steps, each counted once
-    expected = (3 * backend.step_tally(8).cycles
-                + 3 * backend.step_tally(2).cycles
-                + 3 * decode_tally.cycles)
-    assert s["cycles"] == backend.totals.cycles == expected
+    # mean standalone per-token decode cost (context-dependent steps)
+    assert s["cycles_per_decode_token"] == pytest.approx(
+        sum(backend.step_tally(1, (t,)).cycles for t in (9, 10, 11)) / 3.0)
+    # batched decode steps executed as m=2 programs with per-slot contexts
+    assert any(m == 2 and len(ctx) == 2 for m, ctx in backend._step_cache)
+    # engine totals are batch-accurate: 3 prefills + the batched decode
+    # steps, each counted once at its true batch size
+    assert s["cycles"] == backend.totals.cycles > 0
     # the standalone per-request sum exceeds the batched total: that gap
     # is the batching win (shared stationary-weight fetches), by design
     assert sum(r.cycles for r in backend.per_request.values()) >= s["cycles"]
     assert sum(r.weight_bytes for r in backend.per_request.values()) > \
         s["weight_bytes"]
+
+
+def test_summary_cycles_feed_latency_aware_cache_budget(served):
+    """ROADMAP admission-control item: measured serve-path cycles flow into
+    serve.kv_cache.plan, yielding a tokens/sec-aware CacheBudget."""
+    cfg, api, params = served
+    eng = ServeEngine(api, params, max_slots=2, max_seq=64)
+    backend = LegionServeBackend(ACCEL, cfg, params).attach(eng)
+    rng = np.random.default_rng(2)
+    eng.submit(rng.integers(1, cfg.vocab, size=6), max_new_tokens=3)
+    eng.run_until_done()
+    s = backend.summary()
+    assert s["cycles_per_decode_token"] > 0
+
+    budget = kv_plan(cfg, batch=2, max_seq=64, hbm_bytes_per_chip=16e9,
+                     chips=1, cycles_per_token=s["cycles_per_decode_token"],
+                     freq_hz=ACCEL.freq_hz)
+    assert budget.fits_hbm
+    assert budget.tokens_per_sec == pytest.approx(
+        ACCEL.freq_hz / s["cycles_per_decode_token"])
+    assert budget.batch_tokens_per_sec == pytest.approx(
+        2 * budget.tokens_per_sec)
+    assert budget.seconds_to_fill(64) == pytest.approx(
+        64 / budget.tokens_per_sec)
+    # capacity-only planning stays available (and rate-less)
+    plain = kv_plan(cfg, batch=2, max_seq=64, hbm_bytes_per_chip=16e9,
+                    chips=1)
+    assert plain.tokens_per_sec is None and plain.seconds_to_fill(64) is None
+    with pytest.raises(ValueError, match="together"):
+        kv_plan(cfg, batch=2, max_seq=64, hbm_bytes_per_chip=16e9, chips=1,
+                cycles_per_token=100.0)
 
 
 def test_uids_unique_across_interleaved_submits(served):
@@ -132,8 +238,9 @@ def test_uids_unique_across_interleaved_submits(served):
 
 def test_sharded_executor_serve_step_matches_in_process(served):
     """The serve backend's Machine session accepts any ExecutorBackend:
-    a ShardedExecutor step must tally identically to the in-process one
-    (same instrument stream) and still cross-validate."""
+    a ShardedExecutor step (attention stages included) must tally
+    identically to the in-process one (same instrument stream) and still
+    cross-validate."""
     from repro.legion import ShardedExecutor
 
     cfg, _api, params = served
@@ -141,21 +248,39 @@ def test_sharded_executor_serve_step_matches_in_process(served):
     sharded = LegionServeBackend(ACCEL, cfg, params,
                                  executor=ShardedExecutor())
     assert sharded.machine.backend.name == "sharded"
-    a, b = inproc.step_tally(1), sharded.step_tally(1)
+    a, b = inproc.step_tally(1, (8,)), sharded.step_tally(1, (8,))
     assert (a.cycles, a.weight_bytes, a.act_bytes, a.psum_bytes) == \
         (b.cycles, b.weight_bytes, b.act_bytes, b.psum_bytes)
-    traffic_vals, cycle_vals = sharded.cross_validate(m=1, rtol=0.05)
+    traffic_vals, cycle_vals = sharded.cross_validate(m=1, contexts=(8,),
+                                                      rtol=0.05)
     for v in traffic_vals + cycle_vals:
         assert v.ok, str(v)
+
+
+def test_pipelined_executor_serve_step(served):
+    """PipelinedExecutor runs the step program with identical tallies (the
+    overlap is a timing overlay, not a numerics change)."""
+    from repro.legion import PipelinedExecutor
+
+    cfg, _api, params = served
+    inproc = LegionServeBackend(ACCEL, cfg, params)
+    piped = LegionServeBackend(ACCEL, cfg, params,
+                               executor=PipelinedExecutor())
+    a, b = inproc.step_tally(2, (5, 9)), piped.step_tally(2, (5, 9))
+    assert (a.cycles, a.weight_bytes, a.act_bytes) == \
+        (b.cycles, b.weight_bytes, b.act_bytes)
+    rep = piped.machine.run(piped.step_program(2, (5, 9)), validate=False)
+    assert rep.pipeline is not None
+    assert rep.pipeline.overlapped_cycles <= rep.pipeline.serial_cycles
 
 
 def test_step_tally_scales_with_model_layers(served):
     cfg, _api, params = served
     backend = LegionServeBackend(ACCEL, cfg, params)
-    tally = backend.step_tally(1)
+    tally = backend.step_tally(1, (4,))
     per_layer = sum(
         st.cycles for st in tally.stages.values()
     ) / cfg.layers
     assert tally.cycles == pytest.approx(per_layer * cfg.layers)
-    assert tally.gemms == 4
+    assert tally.gemms == 6
     assert tally.executed_passes > 0 and tally.skipped_passes == 0
