@@ -1,8 +1,12 @@
-"""Shared benchmark helpers: timing + CSV row emission.
+"""Shared benchmark helpers: timing + row emission.
 
-Contract (benchmarks/run.py): every benchmark prints rows
-``name,us_per_call,derived`` where ``derived`` is a compact
-``key=value|key=value`` string of the figure's headline numbers.
+Contract (benchmarks/run.py, schema in benchmarks/README.md): every
+benchmark calls :func:`emit` per headline row — it prints the human CSV
+line ``name,us_per_call,derived`` AND returns the machine-readable result
+dict ``{"name", "us_per_call", "derived"}`` that ``run.py --json`` writes
+to ``BENCH_<module>.json`` for the benchmark-trajectory CI artifact.
+Derived keys ending in ``_err`` are error *fractions* gated at 5%, and
+``overlap_x`` keys are serial/overlapped cycle ratios gated at >= 1.0.
 """
 from __future__ import annotations
 
@@ -20,11 +24,11 @@ def timed(fn: Callable, *args, repeats: int = 3, **kw):
     return result, us
 
 
-def emit(name: str, us: float, derived: Dict[str, object]) -> str:
+def emit(name: str, us: float, derived: Dict[str, object]) -> Dict[str, object]:
     flat = "|".join(
         f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
         for k, v in derived.items()
     )
-    row = f"{name},{us:.1f},{flat}"
-    print(row)
-    return row
+    print(f"{name},{us:.1f},{flat}")
+    return {"name": name, "us_per_call": round(float(us), 1),
+            "derived": dict(derived)}

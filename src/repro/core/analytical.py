@@ -95,20 +95,24 @@ def tfu_cycles(cfg: AcceleratorConfig) -> int:
 
 def boundary_overlap_cycles(
     prev_stream: int, next_fill: int, next_pipeline: int,
+    *, prev_drain: int = 0,
 ) -> int:
     """Cycles hidden at a round boundary between DEPENDENCY-INDEPENDENT
     rounds: the incoming round's systolic fill + pipeline ramp proceeds
-    under the outgoing round's activation streaming (the same
+    under the outgoing round's activation streaming — and, when given,
+    its output drain (the array's input side is idle while results drain,
+    so an unrelated round's stationary tiles can fill meanwhile; the same
     double-buffering that hides weight prefetch — ADiP's shared
     shifter/accumulator pipeline keeps the array busy while the next tile
-    set fills).  Bounded by the outgoing stream so the overlapped schedule
-    can never beat the work actually streamed; rounds with a data
-    dependency overlap nothing (the incoming operands do not exist yet).
+    set fills).  Bounded by the outgoing stream + drain so the overlapped
+    schedule can never beat the work actually streamed; rounds with a
+    data dependency overlap nothing (the incoming operands do not exist
+    yet).
 
     The single source of the pipelined-executor timing rule
     (``repro.legion.program.compute_pipeline``).
     """
-    return max(0, min(next_fill + next_pipeline, prev_stream))
+    return max(0, min(next_fill + next_pipeline, prev_stream + prev_drain))
 
 
 # --------------------------------------------------------------------------- #

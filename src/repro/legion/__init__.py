@@ -23,6 +23,7 @@ from repro.legion.latency import (
     CycleCounter,
     CycleValidation,
     cross_validate_cycles,
+    merge_round_criticals,
     total_cycle_error,
 )
 from repro.legion.machine import (
@@ -40,6 +41,7 @@ from repro.legion.machine import (
 )
 from repro.legion.modes import ModeSpec, select_mode
 from repro.legion.program import (
+    LevelTiming,
     PipelineReport,
     Program,
     ProgramError,
@@ -48,6 +50,7 @@ from repro.legion.program import (
     Ref,
     compute_pipeline,
     lower_attention,
+    lower_serve_batch,
     lower_serve_step,
     reference_outputs,
     requantize_int8,
@@ -78,6 +81,7 @@ __all__ = [
     "ExecutorBackend",
     "InProcessExecutor",
     "Instrument",
+    "LevelTiming",
     "Machine",
     "ModeSpec",
     "PipelineReport",
@@ -99,7 +103,9 @@ __all__ = [
     "execute_plan",
     "execute_workload",
     "lower_attention",
+    "lower_serve_batch",
     "lower_serve_step",
+    "merge_round_criticals",
     "prepare_context",
     "reference_outputs",
     "requantize_int8",

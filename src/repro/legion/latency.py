@@ -177,6 +177,29 @@ class CycleCounter:
         return sum(self.stage_cycles().values())
 
 
+def merge_round_criticals(
+    parts: Iterable[Dict[str, List[CycleBreakdown]]],
+) -> Dict[str, List[CycleBreakdown]]:
+    """Fold several counters' per-stage round criticals into one map.
+
+    The merged-graph composition path: a batch/multi-layer program's
+    pipelined schedule (``repro.legion.program.compute_pipeline``) wants
+    one ``stage -> rounds`` map spanning every node, but the serve
+    backend executes (and caches) the *sub*-programs separately — shared
+    projections by row count, each slot's attention pair by (rows,
+    context).  Each part contributes its nodes' round lists; a stage
+    appearing in several parts concatenates in part order (its rounds
+    serialize).  Round criticals depend only on the plan geometry, not on
+    which graph the node executed in, so the composed map schedules the
+    merged levels exactly as a monolithic execution would.
+    """
+    out: Dict[str, List[CycleBreakdown]] = {}
+    for part in parts:
+        for stage, rounds in part.items():
+            out.setdefault(stage, []).extend(rounds)
+    return out
+
+
 # --------------------------------------------------------------------------- #
 # Cross-validation against the analytic simulator
 # --------------------------------------------------------------------------- #

@@ -658,12 +658,16 @@ class PipelinedExecutor(ExecutorBackend):
     ``Machine.run(program)`` feeds every stage's per-round critical paths
     (:meth:`~repro.legion.latency.CycleCounter.round_criticals`) into
     :func:`repro.legion.program.compute_pipeline`, which interleaves
-    rounds within each dependency level and hides the incoming round's
-    systolic fill + pipeline ramp under the outgoing round's streaming.
+    rounds within each dependency level — and across level boundaries
+    whose adjacent rounds have no dependency path (merged-batch slots,
+    multi-layer programs) — hiding the incoming round's systolic fill +
+    pipeline ramp under the outgoing round's streaming + drain.
     The resulting :class:`~repro.legion.program.PipelineReport` rides on
     the :class:`~repro.legion.program.ProgramReport`; overlapped cycles
     are always <= the serial per-stage sum (exactly equal on a chain),
     and the serial sum itself cross-validates against ``simulate()``.
+    ``LegionServeBackend`` runs each decode step's merged batch graph
+    through this model to report the engine-view overlapped latency.
     """
 
     name = "pipelined"

@@ -18,22 +18,33 @@ This module makes the graph first-class:
 
 * :class:`Program` — a validated DAG of stages with topological order and
   dependency levels (antichains), executed by
-  :meth:`repro.legion.machine.Machine.run`;
+  :meth:`repro.legion.machine.Machine.run`.  :meth:`Program.merge` folds
+  *independent* programs into one batch graph (per-slot decode attention
+  interleaved as an antichain — the continuous-batching shape vLLM-style
+  schedulers produce);
 
-* :func:`lower_attention` / :func:`lower_serve_step` — lowering builders
-  producing the paper's attention block (QKV -> score -> softmax -> output
-  -> O-proj) and a full serving step (projections AND attention, KV-cache
-  matrices as per-slot stationary operands with position-dependent K/N);
+* :func:`lower_attention` / :func:`lower_serve_step` /
+  :func:`lower_serve_batch` — lowering builders producing the paper's
+  attention block (QKV -> score -> softmax -> output -> O-proj), a full
+  serving step (projections AND attention, KV-cache matrices as per-slot
+  stationary operands with position-dependent K/N), and one decode step's
+  merged batch graph.  ``explicit_layers`` spans the program over several
+  *explicit* transformer layers — layer ``l+1``'s QKV streams layer
+  ``l``'s MLP output through a real cross-layer dependency instead of the
+  ``layers``-scalar shortcut;
 
 * :func:`compute_pipeline` — the overlapped-round timing model behind
   :class:`~repro.legion.machine.PipelinedExecutor`: rounds of
-  dependency-independent stages (same level) interleave, and each
-  cross-stage round boundary hides the incoming round's systolic fill +
-  pipeline ramp under the outgoing round's streaming
-  (:func:`repro.core.analytical.boundary_overlap_cycles`).  Overlapped
-  cycles are always <= the serial per-stage sum, with exact equality when
-  the graph is a chain (every level a single stage) — the program-level
-  cross-validation invariant;
+  dependency-independent stages interleave, and each round boundary whose
+  two sides have no dependency path hides the incoming round's systolic
+  fill + pipeline ramp under the outgoing round's streaming + drain
+  (:func:`repro.core.analytical.boundary_overlap_cycles`) — within a
+  level *and* across level boundaries (the outgoing level's last round
+  may belong to a stage the incoming stage never consumes, e.g. another
+  slot of a merged batch).  Overlapped cycles are always <= the serial
+  per-stage sum, with exact equality when the graph is a chain (every
+  adjacent round pair is same-stage or data-dependent) — the
+  program-level cross-validation invariant;
 
 * :func:`reference_outputs` — a pure-NumPy execution of the whole graph
   (no plans, no kernels, no machine) that program runs are checked
@@ -220,6 +231,26 @@ class ProgramStage:
                 seen.append(p)
         return tuple(seen)
 
+def _rename_ref(op: "Operand", mapping: Dict[str, str]) -> "Operand":
+    """A Ref with producers renamed through ``mapping`` (external names —
+    not in the mapping — pass through); non-Ref operands unchanged."""
+    if not isinstance(op, Ref):
+        return op
+    return Ref(tuple(mapping.get(p, p) for p in op.producers), op.transform)
+
+
+def _retagged(stage: "ProgramStage", mapping: Dict[str, str]) \
+        -> "ProgramStage":
+    """A copy of ``stage`` with its name, refs, and after-edges renamed."""
+    return dataclasses.replace(
+        stage,
+        name=mapping.get(stage.name, stage.name),
+        x=_rename_ref(stage.x, mapping),
+        w=_rename_ref(stage.w, mapping),
+        after=tuple(mapping.get(a, a) for a in stage.after),
+    )
+
+
 class ProgramError(ValueError):
     """A Program's graph is malformed (dup names, bad refs, cycles...)."""
 
@@ -343,6 +374,63 @@ class Program:
         """Every level holds exactly one stage — nothing to overlap."""
         return all(len(level) == 1 for level in self.levels())
 
+    def ancestors(self) -> Dict[str, frozenset]:
+        """Transitive dependency closure: ``name -> every stage reachable
+        through deps``.  The independence test behind the pipelined
+        schedule — two stages with no ancestry either way may overlap."""
+        anc: Dict[str, frozenset] = {}
+        for s in self.topo_order():
+            a: set = set()
+            for dep in s.deps:
+                a.add(dep)
+                a |= anc.get(dep, frozenset())
+            anc[s.name] = frozenset(a)
+        return anc
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def merge(
+        cls,
+        programs: Sequence["Program"],
+        *,
+        tags: Optional[Sequence[str]] = None,
+    ) -> "Program":
+        """Merge *independent* programs into one batch graph.
+
+        Every program's stage names gain its ``tags`` entry as a suffix
+        (default ``[i]`` when merging more than one program, empty for a
+        single one); :class:`Ref`\\ s and ``after`` edges between a
+        program's *own* stages are renamed along, while refs to names
+        outside it pass through untouched — so lowering builders can
+        merge per-slot subgraphs that hang off shared stages (the batched
+        projections) added around the merged result.
+
+        The merged graph holds the inputs' stages side by side: their
+        dependency levels align, so same-level stages of different slots
+        form exactly the antichain a
+        :class:`~repro.legion.machine.PipelinedExecutor` interleaves —
+        batch-level pipelining of one decode step's per-slot attention
+        programs.  The result is NOT validated here (callers with
+        external refs validate after adding the surrounding stages);
+        colliding names (e.g. duplicate tags) raise :class:`ProgramError`
+        at ``add`` time.
+        """
+        programs = list(programs)
+        if tags is None:
+            tags = [""] if len(programs) == 1 else \
+                [f"[{i}]" for i in range(len(programs))]
+        tags = list(tags)
+        if len(tags) != len(programs):
+            raise ValueError(
+                f"{len(tags)} tags for {len(programs)} programs"
+            )
+        merged = cls()
+        for prog, tag in zip(programs, tags):
+            mapping = {name: name + tag for name in prog.names}
+            for st in prog:
+                merged.add(_retagged(st, mapping))
+        return merged
+
     # ------------------------------------------------------------------ #
     @classmethod
     def single(
@@ -459,8 +547,14 @@ class PipelineReport:
 
     Invariants (the program-level cross-validation): ``overlapped_cycles
     <= serial_cycles`` always, with equality when the program is a chain
-    — ``serial_cycles`` itself equals the per-stage counted totals, which
-    each cross-validate against ``simulate()``.
+    (every adjacent round pair is same-stage or data-dependent) —
+    ``serial_cycles`` itself equals the per-stage counted totals, which
+    each cross-validate against ``simulate()``.  Hidden cycles at a
+    *level boundary* (the incoming stage independent of the outgoing
+    round's stage — merged-batch slots, or a split projection the next
+    stage never consumes) are attributed to the incoming round's level,
+    so single-stage levels may legitimately report ``overlapped <
+    serial``.
     """
 
     levels: List[LevelTiming]
@@ -485,12 +579,8 @@ class PipelineReport:
 
     @property
     def ok(self) -> bool:
-        return all(
-            0 <= lv.overlapped_cycles <= lv.serial_cycles
-            and (lv.overlapped_cycles == lv.serial_cycles
-                 or len(lv.stages) > 1)
-            for lv in self.levels
-        )
+        return all(0 <= lv.overlapped_cycles <= lv.serial_cycles
+                   for lv in self.levels)
 
     def __str__(self) -> str:
         return (f"Pipeline[{len(self.levels)} levels] serial="
@@ -504,23 +594,28 @@ def compute_pipeline(
 ) -> PipelineReport:
     """Overlapped-round schedule from per-round critical paths.
 
-    Levels serialize (data dependencies).  Within a level, the stages'
-    rounds interleave round-robin; at every boundary between rounds of
-    *different* stages the incoming round's fill + pipeline ramp hides
-    under the outgoing round's streaming
-    (:func:`repro.core.analytical.boundary_overlap_cycles`).  Rounds of
-    the same stage never overlap (they share the stage's psum banks and
-    stationary buffers), so a chain program overlaps nothing and the
-    schedule degenerates to the exact serial sum.
+    Levels serialize for *dependent* work; within a level, the stages'
+    rounds interleave round-robin.  At every boundary between rounds of
+    different stages with **no dependency path** from the outgoing stage
+    to the incoming one, the incoming round's fill + pipeline ramp hides
+    under the outgoing round's streaming + drain
+    (:func:`repro.core.analytical.boundary_overlap_cycles`).  The
+    independence test runs across level boundaries too: in a merged
+    batch graph (or a split projection the next stage never consumes —
+    ``attn_score`` after ``v_proj``), the first round of a level can
+    start filling while the previous level's last, unrelated round still
+    streams.  Rounds of the same stage never overlap (they share the
+    stage's psum banks and stationary buffers), and a data-dependent
+    boundary hides nothing (the incoming operands do not exist yet), so
+    a chain program degenerates to the exact serial sum.
     """
+    ancestors = program.ancestors()
     levels: List[LevelTiming] = []
+    prev: Optional[Tuple[str, CycleBreakdown]] = None
     for level in program.levels():
         names = tuple(s.name for s in level)
         seqs = [rounds_by_stage.get(n, []) for n in names]
         serial = sum(b.total for seq in seqs for b in seq)
-        if len(names) <= 1:
-            levels.append(LevelTiming(names, serial, serial))
-            continue
         # round-robin interleave: stage1 r0, stage2 r0, ..., stage1 r1, ...
         order: List[Tuple[str, CycleBreakdown]] = []
         for tier in range(max((len(s) for s in seqs), default=0)):
@@ -528,11 +623,15 @@ def compute_pipeline(
                 if tier < len(seq):
                     order.append((name, seq[tier]))
         hidden = 0
-        for (pname, pb), (nname, nb) in zip(order, order[1:]):
-            if pname != nname:
-                hidden += boundary_overlap_cycles(
-                    pb.stream, nb.fill, nb.pipeline,
-                )
+        for name, nb in order:
+            if prev is not None:
+                pname, pb = prev
+                if pname != name and pname not in ancestors.get(name, ()):
+                    hidden += boundary_overlap_cycles(
+                        pb.stream, nb.fill, nb.pipeline,
+                        prev_drain=pb.drain,
+                    )
+            prev = (name, nb)
         levels.append(LevelTiming(names, serial, serial - hidden))
     return PipelineReport(levels=levels)
 
@@ -698,6 +797,174 @@ def lower_attention(
     return prog
 
 
+def _next_layer_rows(out: np.ndarray) -> np.ndarray:
+    """The cross-layer link: layer ``l``'s final ``[1, m, d_model]``
+    output requantized into the int8 rows layer ``l+1``'s QKV streams."""
+    return requantize_int8(out[0])
+
+
+def _lower_step_layer(
+    by_stage: Dict[str, object],
+    *,
+    m: int,
+    contexts: Tuple[int, ...],
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    attn_layers: int,
+    proj_layer_div: int,
+    seed: int,
+    layer: int,
+    ltag: str,
+    x_link: Optional[str],
+    operands: bool,
+) -> Tuple[Program, str]:
+    """One explicit transformer layer of a serve-step graph.
+
+    Stage names carry ``ltag`` (empty for layer 0); per-slot attention
+    subgraphs are built standalone and folded in via
+    :meth:`Program.merge`, hanging off the shared (batched) projection
+    stages.  ``x_link`` names the previous layer's final stage — its
+    requantized output rows stream into this layer's QKV (the explicit
+    cross-layer dependency).  With ``operands=False`` the graph is a
+    *skeleton*: no arrays are synthesized and every data edge becomes an
+    ``after`` control dependency — same names, workloads, levels, and
+    ancestry, but only schedulable, not executable (the serve backend's
+    per-step overlap computation needs nothing more).  Returns the layer
+    program and the bare name of its final stage (the next layer's link
+    target, before ``ltag``).
+    """
+    rows = m // len(contexts) if contexts else m
+    gs = max(heads // max(kv_heads, 1), 1)
+    rng = np.random.default_rng(seed if layer == 0 else (seed, layer)) \
+        if operands else None
+
+    def synth_x(k: int) -> Optional[np.ndarray]:
+        if not operands:
+            return None
+        return rng.integers(-8, 9, size=(m, k)).astype(np.int8)
+
+    def sized(op) -> GEMMWorkload:
+        return dataclasses.replace(
+            op.workload, m=m, layers=op.workload.layers // proj_layer_div,
+        )
+
+    def stage(name, workload, x, w, deps, **kw) -> ProgramStage:
+        """Concrete stage, or its skeleton twin (deps as ``after``)."""
+        if operands:
+            return ProgramStage(name=name, workload=workload, x=x, w=w,
+                                **kw)
+        return ProgramStage(name=name, workload=workload,
+                            after=tuple(deps), **kw)
+
+    prog = Program()
+    qkv = by_stage.get(QKV_PROJ)
+    attended = bool(contexts)
+    qkv_name = QKV_PROJ + ltag
+    if qkv is not None:
+        prog.add(stage(
+            qkv_name, sized(qkv),
+            (synth_x(qkv.workload.k) if x_link is None
+             else Ref(x_link, _next_layer_rows)),
+            qkv.weights,
+            (x_link,) if x_link is not None else (),
+        ))
+
+    if contexts and qkv is None:
+        raise ValueError(
+            "attention lowering threads Q rows out of a qkv_proj "
+            "projection; none among the given ops"
+        )
+    out_names: List[str] = []
+    score_scale = 1.0 / (127.0 * 8.0 * math.sqrt(max(head_dim, 1)))
+    slot_progs: List[Program] = []
+    for j, t in enumerate(contexts):
+        # per-slot KV cache: one K/V matrix per KV head, synthetic int8
+        # (the engine's real cache lives inside the jitted graph)
+        if operands:
+            slot_rng = np.random.default_rng(
+                (seed, j, t) if layer == 0 else (seed, layer, j, t))
+            k_cache = slot_rng.integers(
+                -8, 9, size=(kv_heads, t, head_dim)).astype(np.int8)
+            v_cache = slot_rng.integers(
+                -8, 9, size=(kv_heads, t, head_dim)).astype(np.int8)
+        score_wl, out_wl = decode_attention_workloads(
+            heads=heads, kv_heads=kv_heads, head_dim=head_dim,
+            context=t, m=rows, layers=attn_layers,
+        )
+        lo_row, hi_row = j * rows, (j + 1) * rows
+
+        def q_rows(out: np.ndarray, lo=lo_row, hi=hi_row) -> np.ndarray:
+            return requantize_int8(out[:heads, lo:hi, :])
+
+        # standalone slot subgraph: bare stage names, external ref to the
+        # shared projection — Program.merge retags it into the batch graph
+        slot_progs.append(Program([
+            stage(
+                ATTN_SCORE, score_wl,
+                Ref(qkv_name, q_rows),
+                (_grouped(np.transpose(k_cache, (0, 2, 1)), heads, gs)
+                 if operands else None),
+                (qkv_name,), w_source=STATIONARY_ACT,
+            ),
+            stage(
+                ATTN_OUTPUT, out_wl,
+                Ref(ATTN_SCORE,
+                    lambda o, sc=score_scale: softmax_int8(o, scale=sc)),
+                _grouped(v_cache, heads, gs) if operands else None,
+                (ATTN_SCORE,), w_source=STATIONARY_ACT,
+            ),
+        ]))
+    if slot_progs:
+        single = len(slot_progs) == 1
+        tags = [ltag] if single else \
+            [f"[{j}]{ltag}" for j in range(len(slot_progs))]
+        for st in Program.merge(slot_progs, tags=tags):
+            prog.add(st)
+        out_names = [ATTN_OUTPUT + tag for tag in tags]
+
+    def concat_slots(*outs: np.ndarray) -> np.ndarray:
+        rows_ = [np.transpose(o, (1, 0, 2)).reshape(o.shape[1],
+                                                    heads * head_dim)
+                 for o in outs]
+        return requantize_int8(np.concatenate(rows_, axis=0))
+
+    last = QKV_PROJ
+    o_proj = by_stage.get(OUT_PROJ)
+    if o_proj is not None:
+        prog.add(stage(
+            OUT_PROJ + ltag, sized(o_proj),
+            (Ref(tuple(out_names), concat_slots) if attended
+             else synth_x(o_proj.workload.k)),
+            o_proj.weights,
+            tuple(out_names) if attended else (),
+        ))
+        last = OUT_PROJ
+
+    # SwiGLU MLP: up branches share the post-attention rows, down consumes
+    # the combined gate*value — serve-side stage names from legion_backend.
+    mlp_up = by_stage.get("mlp_up")
+    mlp_down = by_stage.get("mlp_down")
+    if mlp_up is not None:
+        prog.add(stage(
+            "mlp_up" + ltag, sized(mlp_up),
+            (Ref(OUT_PROJ + ltag, lambda o: requantize_int8(o[0]))
+             if o_proj is not None else synth_x(mlp_up.workload.k)),
+            mlp_up.weights,
+            (OUT_PROJ + ltag,) if o_proj is not None else (),
+        ))
+    if mlp_down is not None:
+        prog.add(stage(
+            "mlp_down" + ltag, sized(mlp_down),
+            (Ref("mlp_up" + ltag, swiglu_int8) if mlp_up is not None
+             else synth_x(mlp_down.workload.k)),
+            mlp_down.weights,
+            ("mlp_up" + ltag,) if mlp_up is not None else (),
+        ))
+        last = "mlp_down"
+    return prog, last
+
+
 def lower_serve_step(
     projections: Sequence,
     *,
@@ -708,6 +975,8 @@ def lower_serve_step(
     head_dim: int = 0,
     layers: int = 1,
     seed: int = 0,
+    explicit_layers: int = 1,
+    operands: bool = True,
 ) -> Program:
     """Lower one serving step — projections AND attention — to a Program.
 
@@ -721,9 +990,51 @@ def lower_serve_step(
     ``[rows, t] @ [t, hd]``), shared across each GQA group.  Outputs
     thread through the graph: qkv -> score -> softmax -> output ->
     O-proj -> SwiGLU mlp, so the whole step is one dependency graph.
+
+    ``explicit_layers`` spans the program over that many *explicit*
+    transformer layers (stage names gain an ``@l`` suffix for layers
+    ``l >= 1``): layer ``l+1``'s QKV streams layer ``l``'s requantized
+    mlp_down (or out_proj) output through a real :class:`Ref` — the
+    cross-layer data dependency the ``layers``-scalar shortcut elides.
+    Every stage workload's ``layers`` multiplier divides by
+    ``explicit_layers`` (must divide evenly), so whole-model tallies are
+    unchanged while the graph exposes the layer structure to a
+    :class:`~repro.legion.machine.PipelinedExecutor`.
+
+    ``operands=False`` builds the *skeleton* graph only — identical
+    names, workloads, levels, and ancestry, but no synthesized arrays
+    (data edges become ``after`` control deps).  Schedulable (the serve
+    backend's per-decode-step overlap computation), not executable.
     """
     by_stage = {op.workload.stage: op for op in projections}
     contexts = tuple(int(t) for t in contexts)
+    if explicit_layers < 1:
+        raise ValueError(
+            f"explicit_layers must be >= 1, got {explicit_layers}"
+        )
+    if explicit_layers > 1:
+        if "mlp_down" not in by_stage and OUT_PROJ not in by_stage:
+            raise ValueError(
+                "explicit_layers > 1 chains layer l+1's qkv off layer l's "
+                "mlp_down (or out_proj) output; neither among the given ops"
+            )
+        if QKV_PROJ not in by_stage:
+            raise ValueError(
+                "explicit_layers > 1 needs a qkv_proj op to stream the "
+                "previous layer's output into"
+            )
+        if layers % explicit_layers:
+            raise ValueError(
+                f"{layers} attention layers cannot split into "
+                f"{explicit_layers} explicit layers"
+            )
+        for op in projections:
+            if op.workload.layers % explicit_layers:
+                raise ValueError(
+                    f"{op.workload.stage}: {op.workload.layers} model "
+                    f"layers cannot split into {explicit_layers} explicit "
+                    f"layers"
+                )
     if contexts:
         if not (heads and kv_heads and head_dim):
             raise ValueError(
@@ -737,97 +1048,58 @@ def lower_serve_step(
             raise ValueError(
                 f"heads={heads} not divisible by kv_heads={kv_heads}"
             )
-    rows = m // len(contexts) if contexts else m
-    gs = max(heads // max(kv_heads, 1), 1)
-    rng = np.random.default_rng(seed)
-
-    def synth_x(k: int) -> np.ndarray:
-        return rng.integers(-8, 9, size=(m, k)).astype(np.int8)
-
-    def sized(op) -> GEMMWorkload:
-        return dataclasses.replace(op.workload, m=m)
 
     prog = Program()
-    qkv = by_stage.get(QKV_PROJ)
-    attended = bool(contexts)
-    if qkv is not None:
-        prog.add(ProgramStage(name=QKV_PROJ, workload=sized(qkv),
-                              x=synth_x(qkv.workload.k), w=qkv.weights))
-
-    if contexts and qkv is None:
-        raise ValueError(
-            "attention lowering threads Q rows out of a qkv_proj "
-            "projection; none among the given ops"
+    link: Optional[str] = None
+    for layer in range(explicit_layers):
+        ltag = "" if layer == 0 else f"@{layer}"
+        layer_prog, last = _lower_step_layer(
+            by_stage, m=m, contexts=contexts, heads=heads,
+            kv_heads=kv_heads, head_dim=head_dim,
+            attn_layers=layers // explicit_layers,
+            proj_layer_div=explicit_layers, seed=seed, layer=layer,
+            ltag=ltag, x_link=link, operands=operands,
         )
-    out_names: List[str] = []
-    score_scale = 1.0 / (127.0 * 8.0 * math.sqrt(max(head_dim, 1)))
-    for j, t in enumerate(contexts):
-        tag = f"[{j}]" if len(contexts) > 1 else ""
-        # per-slot KV cache: one K/V matrix per KV head, synthetic int8
-        # (the engine's real cache lives inside the jitted graph)
-        slot_rng = np.random.default_rng((seed, j, t))
-        k_cache = slot_rng.integers(-8, 9, size=(kv_heads, t, head_dim)) \
-            .astype(np.int8)
-        v_cache = slot_rng.integers(-8, 9, size=(kv_heads, t, head_dim)) \
-            .astype(np.int8)
-        score_wl, out_wl = decode_attention_workloads(
-            heads=heads, kv_heads=kv_heads, head_dim=head_dim,
-            context=t, m=rows, layers=layers,
-        )
-        lo_row, hi_row = j * rows, (j + 1) * rows
-
-        def q_rows(out: np.ndarray, lo=lo_row, hi=hi_row) -> np.ndarray:
-            return requantize_int8(out[:heads, lo:hi, :])
-
-        score_name = ATTN_SCORE + tag
-        out_name = ATTN_OUTPUT + tag
-        prog.add(ProgramStage(
-            name=score_name, workload=score_wl,
-            x=Ref(QKV_PROJ, q_rows),
-            w=_grouped(np.transpose(k_cache, (0, 2, 1)), heads, gs),
-            w_source=STATIONARY_ACT,
-        ))
-        prog.add(ProgramStage(
-            name=out_name, workload=out_wl,
-            x=Ref(score_name,
-                  lambda o, sc=score_scale: softmax_int8(o, scale=sc)),
-            w=_grouped(v_cache, heads, gs),
-            w_source=STATIONARY_ACT,
-        ))
-        out_names.append(out_name)
-
-    def concat_slots(*outs: np.ndarray) -> np.ndarray:
-        rows_ = [np.transpose(o, (1, 0, 2)).reshape(o.shape[1],
-                                                    heads * head_dim)
-                 for o in outs]
-        return requantize_int8(np.concatenate(rows_, axis=0))
-
-    o_proj = by_stage.get(OUT_PROJ)
-    if o_proj is not None:
-        prog.add(ProgramStage(
-            name=OUT_PROJ, workload=sized(o_proj),
-            x=(Ref(tuple(out_names), concat_slots) if attended
-               else synth_x(o_proj.workload.k)),
-            w=o_proj.weights,
-        ))
-
-    # SwiGLU MLP: up branches share the post-attention rows, down consumes
-    # the combined gate*value — serve-side stage names from legion_backend.
-    mlp_up = by_stage.get("mlp_up")
-    mlp_down = by_stage.get("mlp_down")
-    if mlp_up is not None:
-        prog.add(ProgramStage(
-            name="mlp_up", workload=sized(mlp_up),
-            x=(Ref(OUT_PROJ, lambda o: requantize_int8(o[0]))
-               if o_proj is not None else synth_x(mlp_up.workload.k)),
-            w=mlp_up.weights,
-        ))
-    if mlp_down is not None:
-        prog.add(ProgramStage(
-            name="mlp_down", workload=sized(mlp_down),
-            x=(Ref("mlp_up", swiglu_int8) if mlp_up is not None
-               else synth_x(mlp_down.workload.k)),
-            w=mlp_down.weights,
-        ))
+        for st in layer_prog:
+            prog.add(st)
+        link = last + ltag
     prog.validate()
     return prog
+
+
+def lower_serve_batch(
+    projections: Sequence,
+    *,
+    contexts: Sequence[int],
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    layers: int = 1,
+    rows_per_slot: int = 1,
+    seed: int = 0,
+    explicit_layers: int = 1,
+) -> Program:
+    """One decode step's merged batch graph: every active slot's attention
+    program interleaved as an antichain under shared projection stages.
+
+    The continuous-batching shape: ``len(contexts)`` slots decode together
+    (``rows_per_slot`` rows each — 1 for decode), the projections run once
+    batched over all ``m = slots * rows_per_slot`` rows, and each slot's
+    score/output pair attends its own KV context — dependency-independent
+    of every other slot's, so a
+    :class:`~repro.legion.machine.PipelinedExecutor` hides fill/pipeline
+    ramps across slots.  Thin, named front door over
+    :func:`lower_serve_step` (which accepts the same shapes): this is the
+    builder :class:`~repro.serve.legion_backend.LegionServeBackend` uses
+    for its engine-view overlapped latency.
+    """
+    contexts = tuple(int(t) for t in contexts)
+    if not contexts:
+        raise ValueError("lower_serve_batch needs at least one slot context")
+    if rows_per_slot < 1:
+        raise ValueError(f"rows_per_slot must be >= 1, got {rows_per_slot}")
+    return lower_serve_step(
+        projections, m=len(contexts) * rows_per_slot, contexts=contexts,
+        heads=heads, kv_heads=kv_heads, head_dim=head_dim, layers=layers,
+        seed=seed, explicit_layers=explicit_layers,
+    )

@@ -1,20 +1,28 @@
 """Serving substrate: continuous-batching engine + cache planning +
-Legion accelerator backend (per-step projection GEMMs through a
-``repro.legion.Machine`` session).
+Legion accelerator backend (per-step GEMM graphs through a
+``repro.legion.Machine`` session, with the engine-view overlapped
+latency of each decode batch's merged Program).
 """
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_cache import CacheBudget, kv_bytes_per_token
 from repro.serve.legion_backend import (
     LegionServeBackend,
+    ProjectionOp,
     RequestTally,
+    StageTally,
     StepTally,
     extract_projection_ops,
 )
 
 __all__ = [
+    "CacheBudget",
     "LegionServeBackend",
+    "ProjectionOp",
     "Request",
     "RequestTally",
     "ServeEngine",
+    "StageTally",
     "StepTally",
     "extract_projection_ops",
+    "kv_bytes_per_token",
 ]

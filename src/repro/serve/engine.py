@@ -87,6 +87,10 @@ class ServeEngine:
         #                               # (context length for act-to-act
         #                               # attention lowering)
         self.step_observers: List[Callable[[dict], None]] = []
+        # Batch occupancy per decode step (len(uids) of each event): how
+        # full the continuous batch actually ran — the denominator behind
+        # engine-view per-step latencies (serve_pipeline benchmark).
+        self.decode_batch_sizes: List[int] = []
         self._decode = jax.jit(
             lambda params, tok, cache, pos: api.decode(params, tok, cache,
                                                        pos)
@@ -159,6 +163,7 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos)
         )
+        self.decode_batch_sizes.append(len(active))
         self._notify({"kind": "decode", "tokens": 1,
                       "uids": [self.slots[i].request.uid for i in active],
                       "positions": [int(self.slots[i].pos) for i in active]})

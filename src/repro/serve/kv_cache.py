@@ -26,12 +26,23 @@ class CacheBudget:
     # the accelerator sustains per slot, and across the planned batch.
     tokens_per_sec: Optional[float] = None       # one decode stream
     batch_tokens_per_sec: Optional[float] = None  # batch slots decoding
+    # The serial (non-pipelined) reference rate, when the measured cycles
+    # were engine-view overlapped ones — what the same steps would cost
+    # without batch-level pipelining.
+    serial_tokens_per_sec: Optional[float] = None
 
     def seconds_to_fill(self, max_seq: int) -> Optional[float]:
         """Time to decode one slot's window at the measured rate."""
         if not self.tokens_per_sec:
             return None
         return max_seq / self.tokens_per_sec
+
+    @property
+    def pipelining_speedup(self) -> Optional[float]:
+        """Overlapped vs serial decode rate (>= 1; None without both)."""
+        if not (self.tokens_per_sec and self.serial_tokens_per_sec):
+            return None
+        return self.tokens_per_sec / self.serial_tokens_per_sec
 
 
 def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
@@ -48,19 +59,29 @@ def kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> int:
 def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
          chips: int, dtype_bytes: int = 2,
          cycles_per_token: Optional[float] = None,
-         freq_hz: Optional[float] = None) -> CacheBudget:
+         freq_hz: Optional[float] = None,
+         serial_cycles_per_token: Optional[float] = None) -> CacheBudget:
     """Capacity (and optionally latency) budget for a serving deployment.
 
     ``cycles_per_token`` is a *measured* per-token decode cost (e.g.
-    ``LegionServeBackend.summary()["cycles_per_decode_token"]``) at clock
-    ``freq_hz`` (e.g. ``AcceleratorConfig.freq_hz``); both together add the
-    tokens/sec fields to the budget.  Passing one without the other is an
-    error — a cycle count without a clock is not a rate.
+    ``LegionServeBackend.summary()["overlapped_cycles_per_decode_token"]``,
+    the engine-view pipelined cost) at clock ``freq_hz`` (e.g.
+    ``AcceleratorConfig.freq_hz``); both together add the tokens/sec
+    fields to the budget.  Passing one without the other is an error — a
+    cycle count without a clock is not a rate.  ``serial_cycles_per_token``
+    optionally records the non-pipelined reference cost alongside (must
+    ride on ``cycles_per_token``), giving the budget its
+    ``pipelining_speedup``.
     """
     if (cycles_per_token is None) != (freq_hz is None):
         raise ValueError(
             "pass cycles_per_token and freq_hz together (a measured cycle "
             "count needs a clock to become a rate)"
+        )
+    if serial_cycles_per_token is not None and cycles_per_token is None:
+        raise ValueError(
+            "serial_cycles_per_token is the reference for a measured "
+            "cycles_per_token; pass both"
         )
     bpt = kv_bytes_per_token(cfg, dtype_bytes)
     total = bpt * batch * max_seq
@@ -70,6 +91,7 @@ def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
                   * 4 * batch * cfg.layers)
     tps = None
     batch_tps = None
+    serial_tps = None
     if cycles_per_token is not None:
         if cycles_per_token <= 0 or freq_hz <= 0:
             raise ValueError(
@@ -78,8 +100,17 @@ def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
             )
         tps = freq_hz / cycles_per_token
         batch_tps = tps * batch
+        if serial_cycles_per_token is not None:
+            if serial_cycles_per_token < cycles_per_token:
+                raise ValueError(
+                    f"serial_cycles_per_token={serial_cycles_per_token} < "
+                    f"cycles_per_token={cycles_per_token}: the pipelined "
+                    f"cost can never exceed the serial one"
+                )
+            serial_tps = freq_hz / serial_cycles_per_token
     return CacheBudget(
         bytes_per_token=bpt, total_bytes=total,
         fits_hbm=total <= hbm_bytes_per_chip * chips,
         tokens_per_sec=tps, batch_tokens_per_sec=batch_tps,
+        serial_tokens_per_sec=serial_tps,
     )

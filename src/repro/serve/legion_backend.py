@@ -48,13 +48,18 @@ from repro.core.workloads import (
     QKV_PROJ,
     decode_attention_workloads,
 )
-from repro.legion.latency import CycleValidation
+from repro.legion.latency import (
+    CycleBreakdown,
+    CycleValidation,
+    merge_round_criticals,
+)
 from repro.legion.machine import ExecutorBackend, Machine
 from repro.legion.program import (
     STATIONARY_ACT,
     Program,
     ProgramStage,
     Ref,
+    compute_pipeline,
     lower_serve_step,
     softmax_int8,
 )
@@ -248,6 +253,15 @@ class LegionServeBackend:
       batch — that headroom is exactly the batching win, not
       double-counted hardware work.
 
+    A third, **engine view** rides on the batched one: every decode step's
+    merged batch graph (shared projections, per-slot attention antichain —
+    ``repro.legion.program.lower_serve_batch``'s shape) is scheduled
+    through the pipelined overlap model, composed from the cached
+    sub-program round criticals without re-executing anything.
+    ``summary()`` reports ``overlapped_cycles_per_step`` (<= the serial
+    sum, asserted) and the per-token overlapped cycles that
+    :meth:`cache_budget` feeds into ``serve.kv_cache.plan``.
+
     Step tallies are cached compositionally: the context-independent
     projection part by row count ``m``, the attention pair by
     ``(rows, context)``, and the composed step by ``(m, contexts)`` —
@@ -298,6 +312,15 @@ class LegionServeBackend:
         self._attn_cache: Dict[Tuple[int, int], StepTally] = {}  # (rows, t)
         self._decode_cycles = 0          # standalone per-token accumulation
         self._decode_tokens = 0
+        # Engine-view pipelining: per-node round criticals captured from the
+        # cached sub-program executions (keyed by workload shape), and the
+        # merged batch graph's serial/overlapped cycles per step shape.
+        self._rounds: Dict[Tuple[str, int, int, int, int],
+                           List[CycleBreakdown]] = {}
+        self._pipeline_cache: Dict[Tuple[int, Tuple[int, ...]],
+                                   Tuple[int, int]] = {}
+        self._engine_serial_cycles = 0       # batched decode steps, serial
+        self._engine_overlapped_cycles = 0   # same steps, pipelined
 
     # ------------------------------------------------------------------ #
     def attach(self, engine) -> "LegionServeBackend":
@@ -324,9 +347,16 @@ class LegionServeBackend:
                 if len(positions) == len(uids) else (1,) * len(uids)
             # engine view: one batched m=len(uids) step (canonical slot
             # order so permuted batches share a cache entry)
+            batch_ctx = tuple(sorted(contexts))
             self.totals.merge(
-                self.step_tally(len(uids), self._ctx(tuple(sorted(contexts))))
+                self.step_tally(len(uids), self._ctx(batch_ctx))
             )
+            # ... and the same step as a merged batch graph through the
+            # pipelined schedule: per-slot attention rounds interleave, so
+            # the engine-view latency is the overlapped one
+            serial, overlapped = self.step_pipeline(len(uids), batch_ctx)
+            self._engine_serial_cycles += serial
+            self._engine_overlapped_cycles += overlapped
             # request view: each token's standalone m=1 cost at its context
             for uid, t in zip(uids, contexts):
                 tally = self.step_tally(1, self._ctx((t,)))
@@ -365,13 +395,17 @@ class LegionServeBackend:
             ))
         return out
 
-    def step_program(self, m: int, contexts: Sequence[int] = ()) -> Program:
+    def step_program(self, m: int, contexts: Sequence[int] = (), *,
+                     explicit_layers: int = 1) -> Program:
         """Lower one serving step (``m`` rows, per-slot KV contexts) to a
-        Program: projections and attention as one dependency graph."""
+        Program: projections and attention as one dependency graph —
+        ``explicit_layers > 1`` spans it over explicit transformer layers
+        (layer ``l+1``'s QKV streams layer ``l``'s MLP output)."""
         return lower_serve_step(
             self.ops, m=m, contexts=self._ctx(tuple(contexts)),
             heads=self.heads, kv_heads=self.kv_heads,
             head_dim=self.head_dim, layers=self.layers, seed=self.seed,
+            explicit_layers=explicit_layers,
         )
 
     def _tally_program(self, program: Program, m: int) -> StepTally:
@@ -380,8 +414,14 @@ class LegionServeBackend:
                                   check_outputs=self.check_outputs,
                                   validate=False)
         tally = StepTally(m=m)
-        for rep in report.stage_reports.values():
+        for name, rep in report.stage_reports.items():
             w = rep.workload
+            # capture the node's per-round critical paths by workload shape
+            # — step_pipeline composes merged-graph schedules from these
+            # without re-executing (rounds depend only on plan geometry);
+            # cycle cells key by the node name (plan_stage stage= override)
+            self._rounds[(w.stage, w.m, w.k, w.n, w.count)] = \
+                rep.cycles.round_criticals()[name]
             cycles = rep.cycles.total_cycles * w.layers
             traffic = rep.trace.totals.scaled(w.layers)
             tally.gemms += 1
@@ -464,6 +504,50 @@ class LegionServeBackend:
         self._step_cache[key] = tally
         return tally
 
+    def step_pipeline(
+        self, m: int, contexts: Sequence[int] = (),
+    ) -> Tuple[int, int]:
+        """One step's engine-view ``(serial, overlapped)`` cycles — the
+        merged batch graph scheduled through the pipelined model, scaled
+        to all model layers.
+
+        The serial side equals :meth:`step_tally`'s ``cycles`` exactly
+        (both sum the same per-stage round criticals); the overlapped
+        side is what the batch actually costs when dependency-independent
+        rounds — different slots' attention, the split projections —
+        interleave (``repro.legion.program.compute_pipeline``).  Composed
+        from the cached sub-program executions: nothing re-executes, the
+        merged graph only re-*schedules* the measured rounds.
+        """
+        contexts = self._ctx(tuple(contexts))
+        key = (m, contexts)
+        cached = self._pipeline_cache.get(key)
+        if cached is None:
+            self.step_tally(m, contexts)       # populate the round caches
+            # skeleton graph: same names/workloads/levels/ancestry as the
+            # executable step program, but no synthesized operand arrays —
+            # this runs on the per-decode-step hot path
+            program = lower_serve_step(
+                self.ops, m=m, contexts=contexts, heads=self.heads,
+                kv_heads=self.kv_heads, head_dim=self.head_dim,
+                layers=self.layers, seed=self.seed, operands=False,
+            )
+            rounds = merge_round_criticals(
+                {st.name: self._rounds[
+                    (st.workload.stage, st.workload.m, st.workload.k,
+                     st.workload.n, st.workload.count)]}
+                for st in program
+            )
+            pp = compute_pipeline(program, rounds)
+            if not pp.ok:
+                raise AssertionError(
+                    f"engine-view pipeline broke overlapped <= serial: {pp}"
+                )
+            cached = (pp.serial_cycles * self.layers,
+                      pp.overlapped_cycles * self.layers)
+            self._pipeline_cache[key] = cached
+        return cached
+
     # ------------------------------------------------------------------ #
     def cross_validate(
         self, m: int = 1, *, contexts: Optional[Sequence[int]] = None,
@@ -501,6 +585,36 @@ class LegionServeBackend:
         return traffic_vals, cycle_vals
 
     # ------------------------------------------------------------------ #
+    def cache_budget(
+        self, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
+        chips: int, dtype_bytes: int = 2,
+    ):
+        """Latency-aware KV budget from the *measured* serve path.
+
+        The engine-view overlapped per-token cycles (what a pipelined
+        batch actually sustains) set the budget's tokens/sec; the serial
+        per-token cycles ride along so the
+        :class:`~repro.serve.kv_cache.CacheBudget` carries the pipelining
+        speedup.  Needs at least one observed decode step.
+        """
+        from repro.serve.kv_cache import plan as kv_plan
+
+        s = self.summary()
+        overlapped = s["overlapped_cycles_per_decode_token"]
+        if not overlapped:
+            raise ValueError(
+                "cache_budget needs measured decode steps; attach the "
+                "backend to an engine and decode first"
+            )
+        serial = s["serial_cycles_per_decode_token"] or None
+        return kv_plan(
+            self.model_cfg, batch=batch, max_seq=max_seq,
+            hbm_bytes_per_chip=hbm_bytes_per_chip, chips=chips,
+            dtype_bytes=dtype_bytes, cycles_per_token=overlapped,
+            freq_hz=self.cfg.freq_hz, serial_cycles_per_token=serial,
+        )
+
+    # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:
         """Batch-accurate engine totals (``self.totals``) + request counts.
 
@@ -508,14 +622,29 @@ class LegionServeBackend:
         true batch size — the hardware-level total, smaller than the sum of
         the standalone per-request tallies whenever decode steps batched.
         ``cycles_per_decode_token`` is the mean *standalone* per-token cost
-        over every decoded token (position-dependent attention included) —
-        feed it with ``AcceleratorConfig.freq_hz`` into
-        ``repro.serve.kv_cache.plan`` for a latency-aware cache budget.
+        over every decoded token (position-dependent attention included).
+
+        The engine view rides alongside: every batched decode step also
+        runs as one merged batch graph through the pipelined schedule, so
+        ``overlapped_cycles_per_step`` <= ``serial_cycles_per_step``
+        (asserted per step) is the step latency with per-slot attention
+        rounds interleaved, and ``overlapped_cycles_per_decode_token`` is
+        the number to feed — with ``AcceleratorConfig.freq_hz`` — into
+        ``repro.serve.kv_cache.plan`` (or just call :meth:`cache_budget`)
+        for the tokens/sec the fleet actually sustains.
         """
         reqs = self.per_request.values()
         decode_tokens = sum(r.decode_tokens for r in reqs)
         decode_cycles = (self._decode_cycles / self._decode_tokens
                          if self._decode_tokens else 0.0)
+        steps = self.decode_steps
+        serial_step = self._engine_serial_cycles / steps if steps else 0.0
+        overlap_step = (self._engine_overlapped_cycles / steps
+                        if steps else 0.0)
+        overlap_token = (self._engine_overlapped_cycles / self._decode_tokens
+                         if self._decode_tokens else 0.0)
+        serial_token = (self._engine_serial_cycles / self._decode_tokens
+                        if self._decode_tokens else 0.0)
         return {
             "requests": len(self.per_request),
             "prefill_steps": self.prefill_steps,
@@ -528,4 +657,13 @@ class LegionServeBackend:
             "cycles": self.totals.cycles,
             "cycles_per_decode_token": decode_cycles,
             "us_per_decode_token": decode_cycles / self.cfg.freq_hz * 1e6,
+            # engine view: the merged batch graph, pipelined
+            "serial_cycles_per_step": serial_step,
+            "overlapped_cycles_per_step": overlap_step,
+            "serial_cycles_per_decode_token": serial_token,
+            "overlapped_cycles_per_decode_token": overlap_token,
+            "pipeline_speedup": (serial_step / overlap_step
+                                 if overlap_step else 1.0),
+            "overlapped_us_per_decode_token":
+                overlap_token / self.cfg.freq_hz * 1e6,
         }

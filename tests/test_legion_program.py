@@ -13,7 +13,13 @@ The acceptance gate for the `legion.Program` redesign:
 * decode-shaped act-to-act workloads (M=1, K/N = context t) cross-validate
   across the W1.58/W4/W8 mode matrix, including the GQA kv_group fanout;
 * the graph validates (dup names, unknown refs, cycles, operand pairing)
-  and the stage-boundary instrument events fire in pinned order.
+  and the stage-boundary instrument events fire in pinned order;
+* `Program.merge` interleaves independent per-slot programs as an
+  antichain — a merged two-slot decode batch runs bit-exact vs per-slot
+  serial execution with overlapped <= serial and 0% traffic xval — and
+  `lower_serve_step(explicit_layers=N)` spans explicit transformer layers
+  through real cross-layer deps (diamond graphs overlap, chains stay
+  exact).
 """
 import dataclasses
 import math
@@ -44,11 +50,13 @@ from repro.legion import (
     ShardedExecutor,
     TrafficTracer,
     lower_attention,
+    lower_serve_batch,
     lower_serve_step,
     reference_outputs,
     requantize_int8,
     softmax_int8,
 )
+from repro.legion.program import STATIONARY_ACT
 
 CFG = dlegion()                 # 8 Legions x 8 cores x 16x16
 SPEC = dataclasses.replace(bitnet_1_58b_kv(seq_len=64), layers=1)
@@ -298,16 +306,29 @@ class _Op:
         self.weights = weights
 
 
-def _proj_ops(rng, d_model=256, hd=32, heads=4, kv=2):
+def _proj_ops(rng, d_model=256, hd=32, heads=4, kv=2, layers=1):
     from repro.core.workloads import HEAD_PER_UNIT, OUT_PROJ, QKV_PROJ
     qkv = GEMMWorkload(stage=QKV_PROJ, m=1, k=d_model, n=hd, weight_bits=2,
                        count=heads + 2 * kv, shared_input=True,
-                       mapping=HEAD_PER_UNIT)
+                       mapping=HEAD_PER_UNIT, layers=layers)
     opj = GEMMWorkload(stage=OUT_PROJ, m=1, k=heads * hd, n=d_model,
-                       weight_bits=2, count=1, mapping=N_PARTITION)
+                       weight_bits=2, count=1, mapping=N_PARTITION,
+                       layers=layers)
     tern = lambda *s: rng.integers(-1, 2, size=s).astype(np.int8)
     return [_Op(qkv, tern(heads + 2 * kv, d_model, hd)),
             _Op(opj, tern(1, heads * hd, d_model))]
+
+
+def _mlp_ops(rng, d_model=256, d_ff=128, layers=1):
+    up = GEMMWorkload(stage="mlp_up", m=1, k=d_model, n=d_ff, weight_bits=2,
+                      count=2, shared_input=True, mapping=N_PARTITION,
+                      layers=layers)
+    down = GEMMWorkload(stage="mlp_down", m=1, k=d_ff, n=d_model,
+                        weight_bits=2, count=1, mapping=N_PARTITION,
+                        layers=layers)
+    tern = lambda *s: rng.integers(-1, 2, size=s).astype(np.int8)
+    return [_Op(up, tern(2, d_model, d_ff)),
+            _Op(down, tern(1, d_ff, d_model))]
 
 
 def test_lower_serve_step_decode_batched_graph():
@@ -406,3 +427,209 @@ def test_program_report_merges_stage_reports():
     assert "4 stages" in str(rep)
     # per-node plans carry the node name (instrument/cycle cell keys)
     assert rep["attn_score"].plan.stage == "attn_score"
+
+
+# --------------------------------------------------------------------------- #
+# Program.merge: batch graphs of independent per-slot programs
+# --------------------------------------------------------------------------- #
+
+def _slot_attention(seed, t, heads=8, kv=2, hd=128, rows=1):
+    """A standalone decode-slot attention pair (score -> softmax -> output)
+    with concrete synthetic Q / KV-cache operands at context ``t``."""
+    score_wl, out_wl = decode_attention_workloads(
+        heads=heads, kv_heads=kv, head_dim=hd, context=t, m=rows)
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 9, size=(heads, rows, hd)).astype(np.int8)
+    kvm = rng.integers(-8, 9, size=(2, kv, t, hd)).astype(np.int8)
+    group = np.arange(heads) // (heads // kv)
+    scale = 1.0 / (8.0 * 8.0 * math.sqrt(hd))
+    return Program([
+        ProgramStage(name=ATTN_SCORE, workload=score_wl, x=q,
+                     w=np.transpose(kvm[0], (0, 2, 1))[group],
+                     w_source=STATIONARY_ACT),
+        ProgramStage(name=ATTN_OUTPUT, workload=out_wl,
+                     x=Ref(ATTN_SCORE,
+                           lambda o: softmax_int8(o, scale=scale)),
+                     w=kvm[1][group], w_source=STATIONARY_ACT),
+    ])
+
+
+def test_program_merge_two_slot_decode_batch():
+    """The merged-batch acceptance gate: two slots' attention programs
+    merged into one graph run bit-exact vs per-slot serial execution,
+    cross-validate at 0%, and overlap under the pipelined executor."""
+    slots = [_slot_attention(11, 64), _slot_attention(22, 96)]
+    merged = Program.merge(slots)
+    merged.validate()
+    assert merged.names == ("attn_score[0]", "attn_output[0]",
+                            "attn_score[1]", "attn_output[1]")
+    # slots are dependency-independent: their levels align as antichains
+    assert [sorted(s.name for s in lv) for lv in merged.levels()] == [
+        ["attn_score[0]", "attn_score[1]"],
+        ["attn_output[0]", "attn_output[1]"],
+    ]
+
+    solo = [Machine(CFG).run(p) for p in slots]     # per-slot serial runs
+    rep = Machine(CFG, backend=PipelinedExecutor()).run(merged)
+    assert rep.ok
+    # bit-exact vs per-slot serial execution (merging only re-schedules)
+    for j, srep in enumerate(solo):
+        for name in (ATTN_SCORE, ATTN_OUTPUT):
+            assert np.array_equal(rep.outputs[f"{name}[{j}]"],
+                                  srep.outputs[name]), f"{name}[{j}]"
+    # 0% traffic AND cycle xval per merged stage
+    for r in rep.stage_reports.values():
+        assert all(e == 0.0 for e in r.traffic_validation.errors.values())
+        assert r.cycle_validation.rel_err == 0.0
+    pp = rep.pipeline
+    assert pp.ok
+    assert pp.overlapped_cycles < pp.serial_cycles
+    # the serial side is exactly the two standalone runs, and every level
+    # hides cycles — within the level AND across the level boundary (the
+    # outgoing round belongs to the *other* slot's chain)
+    assert pp.serial_cycles == sum(s.serial_cycles for s in solo)
+    assert all(lv.hidden_cycles > 0 for lv in pp.levels)
+
+
+def test_program_merge_tags_refs_and_external_producers():
+    a, b = _slot_attention(1, 32), _slot_attention(2, 32)
+    with pytest.raises(ValueError, match="tags"):
+        Program.merge([a, b], tags=("only-one",))
+    with pytest.raises(ProgramError, match="duplicate"):
+        Program.merge([a, b], tags=("", ""))
+    merged = Program.merge([a, b], tags=(":a", ":b"))
+    assert set(merged.names) == {"attn_score:a", "attn_output:a",
+                                 "attn_score:b", "attn_output:b"}
+    # internal refs renamed along with their producers
+    assert merged["attn_output:a"].x.producers == ("attn_score:a",)
+    # a single program keeps its names by default
+    assert Program.merge([a]).names == a.names
+    # external refs pass through: per-slot programs may hang off shared
+    # stages the caller adds around the merged graph
+    ext = Program([ProgramStage(
+        name="s", workload=_wl("s"),
+        x=Ref("shared", lambda o: requantize_int8(o[0])),
+        w=np.ones((128, 32), np.int8),
+    )])
+    m2 = Program.merge([ext], tags=("[0]",))
+    assert m2["s[0]"].x.producers == ("shared",)
+    with pytest.raises(ProgramError, match="unknown"):
+        m2.validate()                    # dangling until the caller adds it
+    m2.add(ProgramStage(name="shared", workload=_wl("shared", n=128)))
+    m2.validate()
+
+
+def test_pipelined_diamond_graph():
+    """Diamond a -> (b, c) -> d: the independent middle pair overlaps, the
+    dependent edges do not, and outputs stay bit-exact vs NumPy."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(-8, 9, size=(16, 128)).astype(np.int8)
+    wa = rng.integers(-8, 9, size=(128, 64)).astype(np.int8)
+    wb = rng.integers(-8, 9, size=(64, 64)).astype(np.int8)
+    wc = rng.integers(-8, 9, size=(64, 64)).astype(np.int8)
+    wd = rng.integers(-8, 9, size=(64, 64)).astype(np.int8)
+    mid = Ref("a", lambda o: requantize_int8(o[0]))
+    prog = Program([
+        ProgramStage(name="a", workload=_wl("a", m=16, k=128, n=64),
+                     x=x, w=wa),
+        ProgramStage(name="b", workload=_wl("b", m=16, k=64, n=64),
+                     x=mid, w=wb),
+        ProgramStage(name="c", workload=_wl("c", m=16, k=64, n=64),
+                     x=mid, w=wc),
+        ProgramStage(name="d", workload=_wl("d", m=16, k=64, n=64),
+                     x=Ref("b", lambda o: requantize_int8(o[0])),
+                     w=wd, after=("c",)),
+    ])
+    assert [[s.name for s in lv] for lv in prog.levels()] == \
+        [["a"], ["b", "c"], ["d"]]
+    assert prog.ancestors()["d"] == frozenset({"a", "b", "c"})
+
+    rep = Machine(CFG, backend=PipelinedExecutor()).run(prog)
+    assert rep.ok
+    ref = reference_outputs(prog)
+    assert all(np.array_equal(rep.outputs[k], ref[k]) for k in ref)
+    pp = rep.pipeline
+    assert pp.ok
+    assert pp.overlapped_cycles < pp.serial_cycles
+    lv = pp.levels
+    # only the independent b/c pair overlaps: a -> b and (b, c) -> d are
+    # data-dependent boundaries, so the first and last level stay serial
+    assert lv[0].hidden_cycles == 0
+    assert lv[1].hidden_cycles == pp.hidden_cycles > 0
+    assert lv[2].hidden_cycles == 0
+
+
+# --------------------------------------------------------------------------- #
+# Multi-layer programs: explicit cross-layer dependencies
+# --------------------------------------------------------------------------- #
+
+def test_lower_serve_step_multi_layer_explicit_deps():
+    """The multi-layer acceptance gate: a >=2-explicit-layer program whose
+    layer-1 QKV streams layer-0's MLP output validates at 0% traffic AND
+    cycle error vs simulate() and runs bit-exact vs NumPy."""
+    rng = np.random.default_rng(7)
+    ops = _proj_ops(rng, layers=2) + _mlp_ops(rng, layers=2)
+    prog = lower_serve_step(ops, m=1, contexts=(8,), heads=4, kv_heads=2,
+                            head_dim=32, layers=2, explicit_layers=2)
+    assert prog.names == (
+        "qkv_proj", "attn_score", "attn_output", "out_proj",
+        "mlp_up", "mlp_down",
+        "qkv_proj@1", "attn_score@1", "attn_output@1", "out_proj@1",
+        "mlp_up@1", "mlp_down@1",
+    )
+    # the cross-layer link is an explicit data dependency, not a scalar
+    assert prog["qkv_proj@1"].deps == ("mlp_down",)
+    assert isinstance(prog["qkv_proj@1"].x, Ref)
+    # each explicit layer carries its share of the layers multiplier
+    assert all(s.workload.layers == 1 for s in prog)
+
+    rep = Machine(CFG).run(prog)
+    assert rep.ok
+    ref = reference_outputs(prog)
+    assert all(np.array_equal(rep.outputs[k], ref[k]) for k in ref)
+    for r in rep.stage_reports.values():
+        assert all(e == 0.0 for e in r.traffic_validation.errors.values())
+        assert r.cycle_validation.rel_err == 0.0
+    # one slot -> the layered graph is a pure chain: overlapped == serial
+    pp = Machine(CFG, backend=PipelinedExecutor()).run(prog).pipeline
+    assert pp.overlapped_cycles == pp.serial_cycles
+
+
+def test_lower_serve_step_multi_layer_validation():
+    rng = np.random.default_rng(8)
+    ops = _proj_ops(rng) + _mlp_ops(rng)             # layers=1 workloads
+    with pytest.raises(ValueError, match="explicit_layers"):
+        lower_serve_step(ops, m=1, explicit_layers=0)
+    with pytest.raises(ValueError, match="cannot split"):
+        lower_serve_step(ops, m=1, layers=1, explicit_layers=2)
+    with pytest.raises(ValueError, match="mlp_down"):
+        lower_serve_step(ops[:1], m=1, layers=2, explicit_layers=2)
+    # layer count must divide every projection's layers multiplier too
+    mixed = _proj_ops(rng, layers=3) + _mlp_ops(rng, layers=3)
+    with pytest.raises(ValueError, match="cannot split"):
+        lower_serve_step(mixed, m=1, layers=2, explicit_layers=2)
+
+
+def test_lower_serve_batch_two_slots_two_layers():
+    """Batch x layers: the merged decode-batch graph spans two explicit
+    layers and overlaps across slots under the pipelined executor."""
+    rng = np.random.default_rng(9)
+    ops = _proj_ops(rng, layers=2) + _mlp_ops(rng, layers=2)
+    prog = lower_serve_batch(ops, contexts=(5, 9), heads=4, kv_heads=2,
+                             head_dim=32, layers=2, explicit_layers=2)
+    # slot tags then layer tags; per-slot position-dependent K/N per layer
+    assert prog["attn_score[1]@1"].workload.n == 9
+    assert prog["attn_output[0]@1"].workload.k == 5
+    rep = Machine(CFG, backend=PipelinedExecutor()).run(prog)
+    assert rep.ok
+    ref = reference_outputs(prog)
+    assert all(np.array_equal(rep.outputs[k], ref[k]) for k in ref)
+    pp = rep.pipeline
+    assert pp.ok
+    assert pp.overlapped_cycles < pp.serial_cycles
+    with pytest.raises(ValueError, match="slot context"):
+        lower_serve_batch(ops, contexts=(), heads=4, kv_heads=2,
+                          head_dim=32)
+    with pytest.raises(ValueError, match="rows_per_slot"):
+        lower_serve_batch(ops, contexts=(4,), heads=4, kv_heads=2,
+                          head_dim=32, rows_per_slot=0)

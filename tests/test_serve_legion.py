@@ -220,6 +220,84 @@ def test_summary_cycles_feed_latency_aware_cache_budget(served):
                 cycles_per_token=100.0)
 
 
+def test_engine_view_overlapped_latency(served):
+    """The engine view: every batched decode step also runs as a merged
+    batch graph through the pipelined schedule — summary() reports an
+    overlapped per-step latency that never exceeds the serial one, with
+    the serial side exactly equal to the batched step tally."""
+    cfg, api, params = served
+    eng = ServeEngine(api, params, max_slots=2, max_seq=64)
+    backend = LegionServeBackend(ACCEL, cfg, params).attach(eng)
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        eng.submit(rng.integers(1, cfg.vocab, size=8), max_new_tokens=4)
+    eng.run_until_done()
+
+    s = backend.summary()
+    assert 0 < s["overlapped_cycles_per_step"] <= s["serial_cycles_per_step"]
+    assert 0 < s["overlapped_cycles_per_decode_token"] <= \
+        s["serial_cycles_per_decode_token"]
+    # batched steps really ran (engine tracks occupancy) and their slots'
+    # attention rounds interleaved: real overlap, speedup > 1
+    assert any(b == 2 for b in eng.decode_batch_sizes)
+    assert len(eng.decode_batch_sizes) == s["decode_steps"]
+    assert s["pipeline_speedup"] > 1.0
+    assert s["overlapped_us_per_decode_token"] == pytest.approx(
+        s["overlapped_cycles_per_decode_token"] / ACCEL.freq_hz * 1e6)
+
+    # the merged schedule's serial side == the batched tally, cycle for
+    # cycle (same per-stage round criticals, just not interleaved)
+    serial, overlapped = backend.step_pipeline(2, (9, 9))
+    assert serial == backend.step_tally(2, (9, 9)).cycles
+    assert overlapped < serial
+    # single-slot steps are chains: nothing to overlap
+    s1, o1 = backend.step_pipeline(1, (16,))
+    assert s1 == o1 == backend.step_tally(1, (16,)).cycles
+
+
+def test_cache_budget_feeds_overlapped_rate(served):
+    """The engine-view overlapped per-token cycles set the CacheBudget's
+    tokens/sec; the serial reference rides along as pipelining_speedup."""
+    cfg, api, params = served
+    eng = ServeEngine(api, params, max_slots=2, max_seq=64)
+    backend = LegionServeBackend(ACCEL, cfg, params).attach(eng)
+    rng = np.random.default_rng(4)
+    for _ in range(2):
+        eng.submit(rng.integers(1, cfg.vocab, size=6), max_new_tokens=3)
+    eng.run_until_done()
+
+    s = backend.summary()
+    budget = backend.cache_budget(batch=2, max_seq=64,
+                                  hbm_bytes_per_chip=16e9, chips=1)
+    assert budget.fits_hbm
+    assert budget.tokens_per_sec == pytest.approx(
+        ACCEL.freq_hz / s["overlapped_cycles_per_decode_token"])
+    assert budget.serial_tokens_per_sec == pytest.approx(
+        ACCEL.freq_hz / s["serial_cycles_per_decode_token"])
+    assert budget.pipelining_speedup is not None
+    assert budget.pipelining_speedup >= 1.0
+    assert budget.batch_tokens_per_sec == pytest.approx(
+        2 * budget.tokens_per_sec)
+
+    # an unattached backend has no measured steps to budget from
+    fresh = LegionServeBackend(ACCEL, cfg, params)
+    with pytest.raises(ValueError, match="decode"):
+        fresh.cache_budget(batch=1, max_seq=64, hbm_bytes_per_chip=16e9,
+                           chips=1)
+    # plan-level validation of the serial reference
+    with pytest.raises(ValueError, match="serial_cycles_per_token"):
+        kv_plan(cfg, batch=1, max_seq=64, hbm_bytes_per_chip=16e9, chips=1,
+                serial_cycles_per_token=10.0)
+    with pytest.raises(ValueError, match="never exceed"):
+        kv_plan(cfg, batch=1, max_seq=64, hbm_bytes_per_chip=16e9, chips=1,
+                cycles_per_token=100.0, freq_hz=1e9,
+                serial_cycles_per_token=50.0)
+    # a rate-less budget has no speedup to report
+    plain = kv_plan(cfg, batch=1, max_seq=64, hbm_bytes_per_chip=16e9,
+                    chips=1)
+    assert plain.pipelining_speedup is None
+
+
 def test_uids_unique_across_interleaved_submits(served):
     """Submitting while earlier requests sit in slots (neither queued nor
     finished) must not recycle uids — per_request keys on them."""
