@@ -30,5 +30,12 @@ def emit(name: str, us: float, derived: Dict[str, object]) -> Dict[str, object]:
         for k, v in derived.items()
     )
     print(f"{name},{us:.1f},{flat}")
+    # fixed float precision (6 significant digits) so BENCH_*.json artifacts
+    # diff cleanly run-to-run: sub-ulp drift never shows up as a change
+    clean = {
+        k: (float(f"{v:.6g}") if isinstance(v, float)
+            and not isinstance(v, bool) else v)
+        for k, v in derived.items()
+    }
     return {"name": name, "us_per_call": round(float(us), 1),
-            "derived": dict(derived)}
+            "derived": clean}

@@ -1,0 +1,180 @@
+"""Benchmark-trajectory comparer — diff two ``--json`` artifact dirs.
+
+``run.py --json DIR`` writes one ``BENCH_<module>.json`` per module; CI
+stores the directory as the run's trajectory artifact.  This tool compares
+the current directory against a previous run's and exits nonzero when any
+gated derived value regressed beyond tolerance:
+
+    PYTHONPATH=src python -m benchmarks.compare OLD_DIR NEW_DIR [--rtol F]
+
+Direction is inferred from the key name (benchmarks/README.md schema):
+
+* **higher is better** — ``overlap_x``, ``*speedup*``, ``*tokens_per_sec``,
+  ``*_x`` ratios: a drop below ``old * (1 - rtol)`` is a regression;
+* **lower is better** — ``*_err`` fractions, ``*cycles*`` / ``*bytes*``
+  totals, ``p50_*`` / ``p99_*`` latencies, ``us_per_call``: a rise above
+  ``old * (1 + rtol)`` is a regression (``us_per_call`` is *reported* but
+  never gated — host wall-clock is too noisy across runners);
+* anything else (counts, labels, booleans) is compared for information
+  only.
+
+Rows or modules present on one side only are reported as notes, never
+failures — benchmarks come and go as the repo grows, and a first run has
+no previous artifact at all (CI skips the compare step entirely then).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_RTOL = 0.05
+ATOL = 1e-9                 # absolute slack so old == 0.0 never divides/trips
+
+# keys reported but never gated: host wall-clock noise, not model output
+UNGATED_KEYS = frozenset({"us_per_call"})
+
+HIGHER_BETTER_EXACT = frozenset({"overlap_x"})
+HIGHER_BETTER_SUFFIX = ("speedup", "tokens_per_sec", "_x")
+LOWER_BETTER_SUFFIX = ("_err", "_mb", "_kb", "_gb")
+LOWER_BETTER_SUBSTR = ("cycles", "bytes")
+LOWER_BETTER_PREFIX = ("p50_", "p99_", "us_per")
+
+
+def direction(key: str) -> int:
+    """+1 if higher is better, -1 if lower is better, 0 if ungated."""
+    if key in HIGHER_BETTER_EXACT or key.endswith(HIGHER_BETTER_SUFFIX):
+        return +1
+    if (key.endswith(LOWER_BETTER_SUFFIX)
+            or key.startswith(LOWER_BETTER_PREFIX)
+            or any(s in key for s in LOWER_BETTER_SUBSTR)):
+        return -1
+    return 0
+
+
+@dataclasses.dataclass
+class Delta:
+    """One compared value: ``module/row/key old -> new``."""
+
+    module: str
+    row: str
+    key: str
+    old: float
+    new: float
+    regressed: bool
+
+    def __str__(self) -> str:
+        rel = ((self.new - self.old) / abs(self.old)
+               if abs(self.old) > ATOL else float("inf"))
+        tag = "REGRESSION" if self.regressed else "ok"
+        # row names conventionally carry a "module/" prefix already
+        where = (self.row if self.row.startswith(self.module + "/")
+                 else f"{self.module}/{self.row}")
+        return (f"{where}: {self.key} "
+                f"{self.old:.6g} -> {self.new:.6g} ({rel:+.1%}) [{tag}]")
+
+
+def _load_dir(path: str) -> Dict[str, dict]:
+    """``module -> parsed BENCH_<module>.json`` for one artifact dir."""
+    docs: Dict[str, dict] = {}
+    for fname in sorted(os.listdir(path)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        with open(os.path.join(path, fname)) as fh:
+            doc = json.load(fh)
+        docs[doc.get("module", fname[len("BENCH_"):-len(".json")])] = doc
+    if not docs:
+        raise FileNotFoundError(f"no BENCH_*.json artifacts in {path!r}")
+    return docs
+
+
+def _gated_values(row: dict) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for key, val in row.get("derived", {}).items():
+        if key in UNGATED_KEYS or isinstance(val, bool):
+            continue
+        if isinstance(val, (int, float)):
+            out[key] = float(val)
+    return out
+
+
+def compare_dirs(
+    old_dir: str, new_dir: str, *, rtol: float = DEFAULT_RTOL,
+) -> Tuple[List[Delta], List[str]]:
+    """Compare two artifact dirs.  Returns (deltas, notes); a delta with
+    ``regressed=True`` means the value moved against its direction beyond
+    ``rtol`` relative tolerance."""
+    old_docs = _load_dir(old_dir)
+    new_docs = _load_dir(new_dir)
+    deltas: List[Delta] = []
+    notes: List[str] = []
+
+    for module in sorted(set(old_docs) | set(new_docs)):
+        if module not in new_docs:
+            notes.append(f"{module}: module missing from new run")
+            continue
+        if module not in old_docs:
+            notes.append(f"{module}: new module (no previous data)")
+            continue
+        old_rows = {r["name"]: r for r in old_docs[module].get("rows", [])}
+        new_rows = {r["name"]: r for r in new_docs[module].get("rows", [])}
+        if not new_docs[module].get("ok", False):
+            notes.append(f"{module}: new run not ok "
+                         f"(module failed or tripped its own gates)")
+        for name in sorted(set(old_rows) | set(new_rows)):
+            if name not in new_rows:
+                notes.append(f"{module}: row {name!r} missing from new run")
+                continue
+            if name not in old_rows:
+                notes.append(f"{module}: new row {name!r}")
+                continue
+            old_vals = _gated_values(old_rows[name])
+            new_vals = _gated_values(new_rows[name])
+            for key in sorted(set(old_vals) & set(new_vals)):
+                ov, nv = old_vals[key], new_vals[key]
+                sign = direction(key)
+                tol = rtol * abs(ov) + ATOL
+                regressed = (
+                    (sign > 0 and nv < ov - tol)
+                    or (sign < 0 and nv > ov + tol)
+                )
+                if regressed or abs(nv - ov) > tol:
+                    deltas.append(Delta(module=module, row=name, key=key,
+                                        old=ov, new=nv, regressed=regressed))
+    return deltas, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    rtol = DEFAULT_RTOL
+    if "--rtol" in args:
+        i = args.index("--rtol")
+        if i + 1 >= len(args):
+            print("--rtol needs a value", file=sys.stderr)
+            return 2
+        rtol = float(args[i + 1])
+        del args[i:i + 2]
+    if len(args) != 2:
+        print("usage: python -m benchmarks.compare OLD_DIR NEW_DIR "
+              "[--rtol F]", file=sys.stderr)
+        return 2
+
+    deltas, notes = compare_dirs(args[0], args[1], rtol=rtol)
+    for note in notes:
+        print(f"# note: {note}")
+    for d in deltas:
+        print(d)
+    regressions = [d for d in deltas if d.regressed]
+    if regressions:
+        print(f"# {len(regressions)} benchmark regression(s) beyond "
+              f"rtol={rtol:.0%}", file=sys.stderr)
+        return 1
+    print(f"# trajectory ok: {len(deltas)} changed value(s) within "
+          f"tolerance, {len(notes)} note(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,20 @@ def _jsonable(obj):
         return str(obj)
 
 
+def _diff_friendly(obj):
+    """Recursively pin floats to 6 significant digits so the trajectory
+    artifacts diff cleanly between runs (benchmarks/compare.py input)."""
+    if isinstance(obj, bool):
+        return obj
+    if isinstance(obj, float):
+        return float(f"{obj:.6g}")
+    if isinstance(obj, dict):
+        return {k: _diff_friendly(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_diff_friendly(v) for v in obj]
+    return obj
+
+
 def gate_failures(rows: List[dict]) -> List[str]:
     """Trajectory gates over emitted derived values (benchmarks/README.md):
     ``*_err`` keys are error fractions (<= 5%), ``overlap_x`` keys are
@@ -64,7 +78,7 @@ def write_json(json_dir: str, module: str, ok: bool, error: Optional[str],
     path = os.path.join(json_dir, f"BENCH_{module}.json")
     with open(path, "w") as fh:
         json.dump(
-            {
+            _diff_friendly({
                 "schema": 1,
                 "module": module,
                 "ok": ok,
@@ -72,8 +86,8 @@ def write_json(json_dir: str, module: str, ok: bool, error: Optional[str],
                 "gates": {"max_err_fraction": MAX_ERR_FRACTION,
                           "min_overlap_x": MIN_OVERLAP_X},
                 "rows": rows,
-            },
-            fh, indent=2, default=_jsonable,
+            }),
+            fh, indent=2, sort_keys=True, default=_jsonable,
         )
         fh.write("\n")
     return path
@@ -82,7 +96,7 @@ def write_json(json_dir: str, module: str, ok: bool, error: Optional[str],
 def main(argv: Optional[List[str]] = None) -> None:
     from benchmarks import (
         dse, evaluation, kernel_bench, legion_program, legion_runtime,
-        legion_sharded, serve_pipeline,
+        legion_sharded, serve_load, serve_pipeline,
     )
 
     args = list(sys.argv[1:] if argv is None else argv)
@@ -107,6 +121,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         ("legion_program", legion_program),
         ("legion_runtime", legion_runtime),
         ("legion_sharded", legion_sharded),
+        ("serve_load", serve_load),
         ("serve_pipeline", serve_pipeline),
     ]
     assert [name for name, _ in modules] == \

@@ -12,8 +12,7 @@ D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
             weight / stationary act for K-V), attention + serve-step
             lowering builders, the overlapped-round pipeline model, and a
             pure-NumPy reference execution
-- runtime:  plan coverage validation, operand synthesis, deprecated
-            `execute_plan`/`execute_workload` shims (removal: PR 6)
+- runtime:  plan coverage validation, operand synthesis
 - modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
 - trace:    NoC-dedup traffic measurement + simulate() cross-validation
 - latency:  cycle counting (fill/stream/drain/prefetch) + eq.-2 cross-val
@@ -58,10 +57,7 @@ from repro.legion.program import (
     swiglu_int8,
 )
 from repro.legion.runtime import (
-    ExecutionResult,
     PlanCoverageError,
-    execute_plan,
-    execute_workload,
     synthesize_operands,
     validate_coverage,
 )
@@ -77,7 +73,6 @@ __all__ = [
     "CycleCounter",
     "CycleValidation",
     "ExecContext",
-    "ExecutionResult",
     "ExecutorBackend",
     "InProcessExecutor",
     "Instrument",
@@ -100,8 +95,6 @@ __all__ = [
     "compute_pipeline",
     "cross_validate",
     "cross_validate_cycles",
-    "execute_plan",
-    "execute_workload",
     "lower_attention",
     "lower_serve_batch",
     "lower_serve_step",

@@ -1,8 +1,8 @@
 """Cycle model for the Legion runtime — counting the latency eq. (2) derives.
 
 ``simulate()`` *derives* stage latency from closed-form tile counts
-(``unit_latency_cycles``, paper eq. 2).  This module *counts* it: while
-:func:`~repro.legion.runtime.execute_plan` runs a StagePlan, it reports every
+(``unit_latency_cycles``, paper eq. 2).  This module *counts* it: while a
+:class:`~repro.legion.machine.Machine` runs a StagePlan, it reports every
 assignment's executed (K-window, N-tile) passes to a :class:`CycleCounter`,
 which spends cycles the way the ADiP-based Legion hardware would
 (arXiv:2510.10623's fill/drain/prefetch timing model):
@@ -76,7 +76,7 @@ class CycleBreakdown:
 
 
 class CycleCounter:
-    """Accumulates executed-pass cycle counts during ``execute_plan``.
+    """Accumulates executed-pass cycle counts during a ``Machine`` run.
 
     The runtime calls :meth:`record_assignment` once per assignment with the
     number of (K-window, N-tile) passes it actually executed (ZTB-skipped
@@ -143,6 +143,14 @@ class CycleCounter:
         )
 
     # ------------------------------------------------------------------ #
+    def round_cells(self) -> Dict[Tuple[str, int], Dict[int, CycleBreakdown]]:
+        """Copy of the accumulated ``(stage, round) -> legion ->
+        breakdown`` cells — the full per-Legion resolution beneath
+        :meth:`round_criticals` (which keeps only each round's slowest
+        Legion).  ``repro.obs.timeline`` draws one lane per Legion from
+        these."""
+        return {key: dict(legions) for key, legions in self._cells.items()}
+
     def round_criticals(self) -> Dict[str, List[CycleBreakdown]]:
         """Per-stage list of each round's critical (slowest-Legion) path,
         in round order.

@@ -780,6 +780,11 @@ class Machine:
     (unless per-run ``instruments`` are given) plus the machine's registered
     instruments, so ``report.traffic``/``report.cycles`` are per-run while
     registered instruments observe the whole session.
+
+    ``metrics=`` (optional, e.g. :class:`repro.obs.metrics
+    .MetricsRegistry`) additionally accumulates session-level ``machine_*``
+    counters — stage runs, cycles, passes, measured bytes, pipeline
+    speedups — as runs execute.
     """
 
     def __init__(
@@ -793,6 +798,7 @@ class Machine:
         emulate_cores: bool = False,
         accumulators: Optional[int] = None,
         mem_bw_bytes_per_cycle: float = math.inf,
+        metrics: Optional[object] = None,
     ) -> None:
         validate_options(granularity=granularity,
                          kernel_backend=kernel_backend,
@@ -810,6 +816,10 @@ class Machine:
         self.emulate_cores = emulate_cores
         self.accumulators = accumulators
         self.mem_bw = mem_bw_bytes_per_cycle
+        # Duck-typed metrics registry (see repro.obs.metrics
+        # .MetricsRegistry): anything with counter/gauge/histogram
+        # get-or-create methods; None disables metric emission.
+        self.metrics = metrics
 
     # ------------------------------------------------------------------ #
     def add_instrument(self, instrument: object) -> object:
@@ -945,6 +955,12 @@ class Machine:
             if rounds is not None:
                 pipeline = compute_pipeline(program, rounds)
 
+        if self.metrics is not None:
+            self.metrics.counter("machine_programs").inc()
+            if pipeline is not None:
+                self.metrics.histogram("machine_pipeline_speedup") \
+                    .observe(pipeline.speedup)
+
         preport = ProgramReport(
             program=program, stage_reports=reports,
             backend=self.backend.name, pipeline=pipeline,
@@ -1060,6 +1076,20 @@ class Machine:
             backend=self.backend.name, trace=tracer, cycles=counter,
             ztb_stats=ctx.ztb_stats(), workload=workload,
         )
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("machine_stage_runs", labels=("stage",)) \
+                .inc(stage=plan.stage)
+            if counter is not None:
+                m.counter("machine_cycles").inc(counter.total_cycles)
+                m.counter("machine_passes").inc(counter.executed_passes)
+                m.counter("machine_skipped_passes") \
+                    .inc(counter.skipped_passes)
+            if tracer is not None:
+                totals = tracer.totals
+                m.counter("machine_weight_bytes").inc(totals.weight_bytes)
+                m.counter("machine_act_bytes").inc(totals.act_bytes)
+                m.counter("machine_psum_bytes").inc(totals.psum_bytes)
         # Per-stage validation against the analytic simulator.  Auto mode
         # (validate=None) requires the measuring instruments to be this
         # run's own fresh pair (caller-passed instruments may carry earlier

@@ -1,6 +1,6 @@
-"""Legion runtime — plan validation, operand synthesis, legacy entry points.
+"""Legion runtime — plan validation and operand synthesis.
 
-The numerical execution of scheduler StagePlans (SS IV-B/C) now lives behind
+The numerical execution of scheduler StagePlans (SS IV-B/C) lives behind
 the :class:`~repro.legion.machine.Machine` session facade: operand
 preparation and the psum-accumulator window loop are in
 ``repro.legion.machine`` (shared by every :class:`ExecutorBackend`), and
@@ -10,64 +10,28 @@ This module keeps the pieces that are not session state:
 
 * :func:`validate_coverage` — a plan must tile each instance's N-range
   exactly once (gaps/overlaps are hard errors);
-* :func:`synthesize_operands` — reproducible int8 operands per workload;
-* :class:`ExecutionResult` — the legacy result record;
-* :func:`execute_plan` / :func:`execute_workload` — **deprecated** shims
-  that delegate to ``Machine`` and emit ``DeprecationWarning``; use
-  ``Machine(cfg).run(...)`` instead.
+* :func:`synthesize_operands` — reproducible int8 operands per workload.
 
-Removal timeline: the shims shipped deprecated in PR 3 and are scheduled
-for removal in **PR 6** (two PRs after the PR-4 Program API redesign) —
-migrate callers to ``Machine.run`` before then.
+The ``execute_plan``/``execute_workload`` shims that once lived here
+(deprecated in PR 3) were removed in PR 6; ``Machine(cfg).run(...)`` is
+the only entry point.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-import warnings
-from typing import (
-    TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union,
-)
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-
-if TYPE_CHECKING:  # pragma: no cover
-    from repro.legion.latency import CycleCounter
 
 from repro.core.config import AcceleratorConfig
 from repro.core.scheduler import StagePlan
 from repro.core.sparsity import ZeroTileBook, ZTBStats, ztb_from_weight
 from repro.core.workloads import GEMMWorkload
 from repro.legion.modes import ModeSpec
-from repro.legion.trace import TrafficTracer
 
 
 class PlanCoverageError(ValueError):
     """A StagePlan's assignments do not exactly tile an instance's N-range."""
-
-
-@dataclasses.dataclass
-class ExecutionResult:
-    """Outputs + measured traffic (and cycles) of one executed StagePlan.
-
-    The legacy result record of ``execute_plan``/``execute_workload``; new
-    code receives a :class:`~repro.legion.machine.RunReport` from
-    ``Machine.run`` instead (same payload plus per-stage validation).
-    """
-
-    outputs: np.ndarray            # [count, M, N] int32 (or float32)
-    trace: TrafficTracer
-    mode: ModeSpec
-    plan: StagePlan
-    ztb_stats: Optional[ZTBStats] = None
-    cycles: Optional["CycleCounter"] = None   # repro.legion.latency counter
-
-    @property
-    def output(self) -> np.ndarray:
-        """Single-instance convenience view."""
-        if self.outputs.shape[0] != 1:
-            raise ValueError(f"{self.outputs.shape[0]} instances; use .outputs")
-        return self.outputs[0]
 
 
 def validate_coverage(
@@ -150,58 +114,7 @@ def combined_ztb_stats(books: Sequence[ZeroTileBook]) -> ZTBStats:
 
 
 # --------------------------------------------------------------------------- #
-# Deprecated entry points (delegate to Machine)
-# --------------------------------------------------------------------------- #
-
-def execute_plan(
-    cfg: AcceleratorConfig,
-    plan: StagePlan,
-    x: np.ndarray,
-    w: np.ndarray,
-    *,
-    mode: Optional[ModeSpec] = None,
-    ztb: Union[None, bool, ZeroTileBook, Sequence[ZeroTileBook]] = None,
-    tracer: Optional[TrafficTracer] = None,
-    cycles: Optional["CycleCounter"] = None,
-    granularity: str = "window",
-    kernel_backend: str = "reference",
-    emulate_cores: bool = False,
-    accumulators: Optional[int] = None,
-) -> ExecutionResult:
-    """Deprecated: use ``Machine(cfg).run(plan, x, w)``.
-
-    Runs every assignment of ``plan`` in-process and returns outputs +
-    traffic, exactly as before — via a throwaway
-    :class:`~repro.legion.machine.Machine` session, with ``tracer``/
-    ``cycles`` attached as instruments.
-    """
-    warnings.warn(
-        "execute_plan is deprecated (removal: PR 6); use repro.legion"
-        ".Machine(cfg).run(plan, x, w) — instruments replace the "
-        "tracer=/cycles= kwargs",
-        DeprecationWarning, stacklevel=2,
-    )
-    from repro.legion.machine import Machine
-
-    machine = Machine(
-        cfg, granularity=granularity, kernel_backend=kernel_backend,
-        emulate_cores=emulate_cores, accumulators=accumulators,
-    )
-    tr = tracer if tracer is not None else TrafficTracer()
-    instruments: List[object] = [tr]
-    if cycles is not None:
-        instruments.append(cycles)
-    rep = machine.run(plan, x, w, mode=mode, ztb=ztb,
-                      check_outputs=False,     # execute_plan never checked
-                      instruments=instruments)
-    return ExecutionResult(
-        outputs=rep.outputs, trace=tr, mode=rep.mode, plan=rep.plan,
-        ztb_stats=rep.ztb_stats, cycles=cycles,
-    )
-
-
-# --------------------------------------------------------------------------- #
-# Workload-level convenience (synthetic operands, reference check)
+# Workload-level operand synthesis
 # --------------------------------------------------------------------------- #
 
 def synthesize_operands(
@@ -238,46 +151,3 @@ def synthesize_operands(
         for i in zeroed:
             weights[:, i * k_window:(i + 1) * k_window, :] = 0
     return x, weights
-
-
-def execute_workload(
-    cfg: AcceleratorConfig,
-    w: GEMMWorkload,
-    *,
-    seed: int = 0,
-    ztb_sparsity: float = 0.0,
-    check_outputs: bool = True,
-    granularity: str = "window",
-    kernel_backend: str = "reference",
-    emulate_cores: bool = False,
-    cycles: Optional["CycleCounter"] = None,
-    accumulators: Optional[int] = None,
-) -> ExecutionResult:
-    """Deprecated: use ``Machine(cfg).run(workload)``.
-
-    Plan + synthesize + execute one workload (single layer) with the output
-    check against the plain ``x @ w`` dense reference — via a throwaway
-    :class:`~repro.legion.machine.Machine` session.
-    """
-    warnings.warn(
-        "execute_workload is deprecated (removal: PR 6); use repro.legion"
-        ".Machine(cfg).run(workload) — the RunReport carries traffic, "
-        "cycles, and validation",
-        DeprecationWarning, stacklevel=2,
-    )
-    from repro.legion.machine import Machine
-
-    machine = Machine(
-        cfg, granularity=granularity, kernel_backend=kernel_backend,
-        emulate_cores=emulate_cores, accumulators=accumulators,
-    )
-    tr = TrafficTracer()
-    instruments: List[object] = [tr]
-    if cycles is not None:
-        instruments.append(cycles)
-    rep = machine.run(w, seed=seed, ztb_sparsity=ztb_sparsity,
-                      check_outputs=check_outputs, instruments=instruments)
-    return ExecutionResult(
-        outputs=rep.outputs, trace=tr, mode=rep.mode, plan=rep.plan,
-        ztb_stats=rep.ztb_stats, cycles=cycles,
-    )

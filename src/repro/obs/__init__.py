@@ -1,0 +1,80 @@
+"""Observability subsystem — timelines, metrics, and load generation.
+
+Three layers riding the runtime's pinned Instrument event stream and the
+serve path's cycle model:
+
+- timeline: `TimelineTracer` — per-stage/per-Legion/per-round cycle
+            timelines (serial + overlapped placements) exported as Chrome
+            trace-event JSON for Perfetto
+- metrics:  `MetricsRegistry` — labeled Counter/Gauge/Histogram series
+            with deterministic snapshots; `Machine`, `ServeEngine`,
+            `LegionServeBackend` accept it via their `metrics=` kwarg
+- loadgen:  Poisson/bursty arrival traces replayed through a live
+            `ServeEngine` on a virtual cycle clock — p50/p99 TTFT,
+            per-token latency, occupancy, rejected/deferred admissions
+
+Submodules import lazily (PEP 562): `repro.obs.metrics` stays importable
+from `repro.serve.engine` without pulling `loadgen`'s serve-side
+dependencies back in.
+"""
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.obs.loadgen import (
+        Arrival,
+        LoadReport,
+        RequestRecord,
+        bursty_trace,
+        poisson_trace,
+        run_load,
+    )
+    from repro.obs.metrics import (
+        Counter,
+        Gauge,
+        Histogram,
+        MetricsRegistry,
+    )
+    from repro.obs.timeline import (
+        ProgramTimeline,
+        RoundSlice,
+        Schedule,
+        SkipEvent,
+        TimelineCell,
+        TimelineError,
+        TimelineTracer,
+    )
+
+_EXPORTS = {
+    "Arrival": "repro.obs.loadgen",
+    "LoadReport": "repro.obs.loadgen",
+    "RequestRecord": "repro.obs.loadgen",
+    "bursty_trace": "repro.obs.loadgen",
+    "poisson_trace": "repro.obs.loadgen",
+    "run_load": "repro.obs.loadgen",
+    "Counter": "repro.obs.metrics",
+    "Gauge": "repro.obs.metrics",
+    "Histogram": "repro.obs.metrics",
+    "MetricsRegistry": "repro.obs.metrics",
+    "ProgramTimeline": "repro.obs.timeline",
+    "RoundSlice": "repro.obs.timeline",
+    "Schedule": "repro.obs.timeline",
+    "SkipEvent": "repro.obs.timeline",
+    "TimelineCell": "repro.obs.timeline",
+    "TimelineError": "repro.obs.timeline",
+    "TimelineTracer": "repro.obs.timeline",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

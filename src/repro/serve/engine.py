@@ -60,7 +60,8 @@ class ServeEngine:
 
     def __init__(self, api, params, *, max_slots: int = 4,
                  max_seq: int = 512, greedy: bool = True,
-                 temperature: float = 1.0, seed: int = 0):
+                 temperature: float = 1.0, seed: int = 0,
+                 metrics=None):
         if api.decode is None:
             raise ValueError(f"{api.cfg.name} is encoder-only; no decode")
         self.api = api
@@ -91,6 +92,14 @@ class ServeEngine:
         # full the continuous batch actually ran — the denominator behind
         # engine-view per-step latencies (serve_pipeline benchmark).
         self.decode_batch_sizes: List[int] = []
+        # Per-step phase + active-slot history covering prefill AND decode
+        # ({"phase", "slots", "tokens"[, "uid"]}) — the occupancy series
+        # the load harness reads; admission bursts show up as runs of
+        # prefill entries that decode_batch_sizes alone never records.
+        self.step_log: List[Dict[str, int]] = []
+        # Duck-typed metrics registry (see repro.obs.metrics
+        # .MetricsRegistry); None disables serve_* metric emission.
+        self.metrics = metrics
         self._decode = jax.jit(
             lambda params, tok, cache, pos: api.decode(params, tok, cache,
                                                        pos)
@@ -129,6 +138,15 @@ class ServeEngine:
             req.output.append(int(tok[0]))
             slot.request = req
             slot.pos = plen
+            self.step_log.append({"phase": "prefill", "uid": req.uid,
+                                  "tokens": plen,
+                                  "slots": len(self._active())})
+            if self.metrics is not None:
+                self.metrics.counter("serve_prefill_steps").inc()
+                self.metrics.counter("serve_prefill_tokens").inc(plen)
+                self.metrics.histogram("serve_prompt_tokens").observe(plen)
+                self.metrics.gauge("serve_slot_occupancy").set(
+                    len(self._active()) / self.max_slots)
             self._notify({"kind": "prefill", "uid": req.uid,
                           "tokens": plen})
 
@@ -164,6 +182,14 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos)
         )
         self.decode_batch_sizes.append(len(active))
+        self.step_log.append({"phase": "decode", "tokens": len(active),
+                              "slots": len(active)})
+        if self.metrics is not None:
+            self.metrics.counter("serve_decode_steps").inc()
+            self.metrics.counter("serve_decode_tokens").inc(len(active))
+            self.metrics.histogram("serve_batch_size").observe(len(active))
+            self.metrics.gauge("serve_slot_occupancy").set(
+                len(active) / self.max_slots)
         self._notify({"kind": "decode", "tokens": 1,
                       "uids": [self.slots[i].request.uid for i in active],
                       "positions": [int(self.slots[i].pos) for i in active]})

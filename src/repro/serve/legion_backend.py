@@ -285,6 +285,7 @@ class LegionServeBackend:
         mem_bw_bytes_per_cycle: float = math.inf,
         executor: Optional[ExecutorBackend] = None,
         attention: bool = True,
+        metrics=None,
     ) -> None:
         self.cfg = accel_cfg
         self.model_cfg = model_cfg
@@ -297,6 +298,9 @@ class LegionServeBackend:
         self.kv_heads = model_cfg.kv_heads
         self.head_dim = model_cfg.head_dim_
         self.layers = model_cfg.layers
+        # Duck-typed metrics registry (see repro.obs.metrics
+        # .MetricsRegistry); None disables serve_backend_* / kv_* metrics.
+        self.metrics = metrics
         # One Machine session serves every step; swap `executor` for e.g.
         # repro.legion.ShardedExecutor to run steps device-parallel.
         self.machine = Machine(
@@ -337,6 +341,9 @@ class LegionServeBackend:
             req = self._request(event["uid"])
             req.prefill_tokens += tokens
             req.add(tally)
+            if self.metrics is not None:
+                self.metrics.counter("serve_backend_prefill_cycles") \
+                    .inc(tally.cycles)
         elif event["kind"] == DECODE:
             self.decode_steps += 1
             uids = event["uids"]
@@ -357,6 +364,12 @@ class LegionServeBackend:
             serial, overlapped = self.step_pipeline(len(uids), batch_ctx)
             self._engine_serial_cycles += serial
             self._engine_overlapped_cycles += overlapped
+            if self.metrics is not None:
+                m = self.metrics
+                m.counter("serve_backend_serial_cycles").inc(serial)
+                m.counter("serve_backend_overlapped_cycles").inc(overlapped)
+                m.histogram("serve_step_overlap_x").observe(
+                    serial / overlapped if overlapped else 1.0)
             # request view: each token's standalone m=1 cost at its context
             for uid, t in zip(uids, contexts):
                 tally = self.step_tally(1, self._ctx((t,)))
@@ -365,6 +378,9 @@ class LegionServeBackend:
                 req.add(tally)
                 self._decode_cycles += tally.cycles
                 self._decode_tokens += 1
+            if self.metrics is not None and self._decode_tokens:
+                self.metrics.gauge("serve_cycles_per_decode_token").set(
+                    self._decode_cycles / self._decode_tokens)
 
     def _request(self, uid: int) -> RequestTally:
         return self.per_request.setdefault(uid, RequestTally(uid=uid))
@@ -607,12 +623,22 @@ class LegionServeBackend:
                 "backend to an engine and decode first"
             )
         serial = s["serial_cycles_per_decode_token"] or None
-        return kv_plan(
+        budget = kv_plan(
             self.model_cfg, batch=batch, max_seq=max_seq,
             hbm_bytes_per_chip=hbm_bytes_per_chip, chips=chips,
             dtype_bytes=dtype_bytes, cycles_per_token=overlapped,
             freq_hz=self.cfg.freq_hz, serial_cycles_per_token=serial,
         )
+        if self.metrics is not None:
+            m = self.metrics
+            m.gauge("kv_cache_utilization").set(
+                budget.total_bytes / (hbm_bytes_per_chip * chips))
+            if budget.tokens_per_sec:
+                m.gauge("kv_tokens_per_sec").set(budget.tokens_per_sec)
+            if budget.pipelining_speedup:
+                m.gauge("kv_pipelining_speedup").set(
+                    budget.pipelining_speedup)
+        return budget
 
     # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:

@@ -1,4 +1,4 @@
-"""Machine session API: instruments, executor backends, deprecation shims.
+"""Machine session API: instruments, executor backends, option validation.
 
 The acceptance gate for the `legion.Machine` redesign:
 
@@ -10,10 +10,11 @@ The acceptance gate for the `legion.Machine` redesign:
 * `ShardedExecutor` (Legion axis on a JAX mesh axis) is bit-exact with
   `InProcessExecutor` across the W1.58/W4/W8 ±ZTB mode matrix and fires an
   identical measurement stream;
-* the deprecated `execute_plan`/`execute_workload` shims warn and match the
-  new API's results exactly;
 * nonsensical options (accumulators<=0, unknown kernel_backend) are
   rejected with clear ValueErrors at the Machine boundary.
+
+The deprecated `execute_plan`/`execute_workload` shims were removed in
+PR 6; the export-hygiene test pins that they stay gone.
 """
 import dataclasses
 import math
@@ -40,8 +41,6 @@ from repro.legion import (
     RunReport,
     ShardedExecutor,
     TrafficTracer,
-    execute_plan,
-    execute_workload,
     synthesize_operands,
 )
 
@@ -183,48 +182,6 @@ def test_validate_flag_semantics():
         # explicit plans have no workload to simulate
         x, weights = synthesize_operands(w)
         Machine(CFG).run(plan_stage(CFG, w), x, weights, validate=True)
-
-
-def test_deprecated_shims_inherit_validation():
-    w = _w8()
-    plan = plan_stage(CFG, w)
-    x, weights = synthesize_operands(w)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="accumulators"):
-            execute_plan(CFG, plan, x, weights, accumulators=0)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="kernel_backend"):
-            execute_workload(CFG, w, kernel_backend="tpu")
-
-
-# --------------------------------------------------------------------------- #
-# Deprecation shims: warn + exact result equivalence
-# --------------------------------------------------------------------------- #
-
-def test_execute_workload_warns_and_matches_machine():
-    w = _w2()
-    with pytest.warns(DeprecationWarning, match="execute_workload"):
-        old = execute_workload(CFG, w, seed=3)
-    new = Machine(CFG).run(w, seed=3)
-    assert np.array_equal(old.outputs, new.outputs)
-    assert old.trace.totals == new.trace.totals
-    assert old.mode == new.mode
-
-
-def test_execute_plan_warns_and_matches_machine():
-    w = _w8()
-    plan = plan_stage(CFG, w)
-    x, weights = synthesize_operands(w, seed=5)
-    tracer = TrafficTracer()
-    counter = CycleCounter(CFG)
-    with pytest.warns(DeprecationWarning, match="execute_plan"):
-        old = execute_plan(CFG, plan, x, weights, tracer=tracer,
-                           cycles=counter)
-    assert old.trace is tracer and old.cycles is counter
-    new = Machine(CFG).run(plan, x, weights)
-    assert np.array_equal(old.outputs, new.outputs)
-    assert tracer.totals == new.trace.totals
-    assert counter.total_cycles == new.cycles.total_cycles
 
 
 # --------------------------------------------------------------------------- #
@@ -505,6 +462,9 @@ def test_legion_exports_sorted_and_complete():
     for name in ("Machine", "RunReport", "Instrument", "ExecutorBackend",
                  "InProcessExecutor", "ShardedExecutor"):
         assert name in legion.__all__ and hasattr(legion, name)
+    # the PR-3 deprecation shims were removed in PR 6 and must stay gone
+    for name in ("execute_plan", "execute_workload", "ExecutionResult"):
+        assert name not in legion.__all__ and not hasattr(legion, name)
     assert serve.__all__ == sorted(serve.__all__)
     assert "LegionServeBackend" in serve.__all__
     assert isinstance(InProcessExecutor(), object)

@@ -1,4 +1,4 @@
-"""Property sweep of the runtime mode matrix — execute_plan numerics.
+"""Property sweep of the runtime mode matrix — Machine.run numerics.
 
 Two layers of coverage for the same invariant (every mode's output equals
 the dense ``x @ w`` reference bit-exactly, int32 accumulation):
@@ -28,12 +28,7 @@ from repro.core.workloads import (
     QKV_PROJ,
     GEMMWorkload,
 )
-from repro.legion import (
-    CycleCounter,
-    execute_plan,
-    execute_workload,
-    synthesize_operands,
-)
+from repro.legion import Machine, synthesize_operands
 from repro.legion.modes import BITLINEAR, BLOCK_SPARSE, DENSE
 
 
@@ -64,9 +59,8 @@ def _check_case(m, k, n, count, bits, ztb, legions, cores, d, mapping,
         w, seed=seed, ztb_sparsity=0.5 if ztb else 0.0,
         k_window=plan.assignments[0].k_window,
     )
-    counter = CycleCounter(cfg)
-    res = execute_plan(cfg, plan, x, weights, ztb=True if ztb else None,
-                       accumulators=banks, cycles=counter)
+    res = Machine(cfg, accumulators=banks).run(
+        plan, x, weights, ztb=True if ztb else None)
     ref = _reference(x, weights, count)
     assert np.array_equal(res.outputs.astype(np.int64), ref), (
         f"mode {res.mode.name} diverged from dense reference "
@@ -74,7 +68,7 @@ def _check_case(m, k, n, count, bits, ztb, legions, cores, d, mapping,
     )
     expected = {2: BITLINEAR, 4: BITLINEAR, 8: DENSE}[bits]
     assert res.mode.backend == (BLOCK_SPARSE if ztb else expected)
-    assert counter.total_cycles > 0
+    assert res.cycles.total_cycles > 0
     return res
 
 
@@ -121,7 +115,7 @@ def test_custom_k_window_matches_dense_reference(bits, k_window_tiles):
     lohi = {2: (-1, 2), 4: (-8, 8), 8: (-8, 9)}[bits]
     x = rng.integers(-8, 9, size=(m, k)).astype(np.int8)
     w = rng.integers(*lohi, size=(1, k, n)).astype(np.int8)
-    res = execute_plan(cfg, plan, x, w)
+    res = Machine(cfg).run(plan, x, w)
     ref = x.astype(np.int64) @ w[0].astype(np.int64)
     assert np.array_equal(res.output.astype(np.int64), ref)
 
@@ -155,9 +149,9 @@ if HAVE_HYPOTHESIS:
         shared=st.booleans(),
         seed=st.integers(0, 2**16),
     )
-    def test_execute_plan_equals_dense_reference(m, k, n, count, bits, ztb,
-                                                 legions, geometry, banks,
-                                                 mapping, shared, seed):
+    def test_machine_run_equals_dense_reference(m, k, n, count, bits, ztb,
+                                                legions, geometry, banks,
+                                                mapping, shared, seed):
         cores, d = geometry
         _check_case(m, k, n, count, bits, ztb, legions, cores, d, mapping,
                     shared, banks, seed)
@@ -177,9 +171,9 @@ if HAVE_HYPOTHESIS:
         cfg = _cfg(legions=2, cores=2, d=8)
         w = GEMMWorkload(stage=QKV_PROJ, m=m, k=k, n=n, weight_bits=bits,
                          count=2, shared_input=True, mapping=HEAD_PER_UNIT)
-        base = execute_workload(cfg, w, seed=seed)
+        base = Machine(cfg).run(w, seed=seed)
         for banks in (1, 3, 8):
-            v = execute_workload(cfg, w, seed=seed, accumulators=banks)
+            v = Machine(cfg, accumulators=banks).run(w, seed=seed)
             assert np.array_equal(base.outputs, v.outputs)
-        emu = execute_workload(cfg, w, seed=seed, emulate_cores=True)
+        emu = Machine(cfg, emulate_cores=True).run(w, seed=seed)
         assert np.array_equal(base.outputs, emu.outputs)

@@ -26,11 +26,10 @@ from repro.core.workloads import (
 )
 from repro.legion import (
     CycleCounter,
+    Machine,
     PlanCoverageError,
     cross_validate,
     cross_validate_cycles,
-    execute_plan,
-    execute_workload,
     select_mode,
     synthesize_operands,
     total_cycle_error,
@@ -65,7 +64,7 @@ def _reference(x, weights, count):
 
 def test_dense_mode_matches_reference():
     w = _dense_w8()
-    res = execute_workload(CFG, w)       # check_outputs asserts internally
+    res = Machine(CFG).run(w)            # check_outputs asserts internally
     assert res.mode.backend == DENSE
     x, weights = synthesize_operands(w)
     ref = _reference(x, weights, w.count)
@@ -74,21 +73,21 @@ def test_dense_mode_matches_reference():
 
 def test_ternary_bitlinear_mode_matches_reference():
     w = _ternary_w2()
-    res = execute_workload(CFG, w)
+    res = Machine(CFG).run(w)
     assert res.mode.backend == BITLINEAR
     assert res.mode.name == "W1.58" and res.mode.r == 4
 
 
 def test_w4_bitlinear_mode_matches_reference():
     w = dataclasses.replace(_ternary_w2(), weight_bits=4)
-    res = execute_workload(CFG, w)   # values must stay in int4 [-8, 7]
+    res = Machine(CFG).run(w)        # values must stay in int4 [-8, 7]
     assert res.mode.name == "W4" and res.mode.r == 2
     assert res.mode.backend == BITLINEAR
 
 
 def test_ztb_sparse_mode_matches_reference():
     w = _ternary_w2()
-    res = execute_workload(CFG, w, ztb_sparsity=0.5)
+    res = Machine(CFG).run(w, ztb_sparsity=0.5)
     assert res.mode.backend == BLOCK_SPARSE
     assert res.mode.sparse
     # half the K-windows were pruned and the book saw them
@@ -98,8 +97,8 @@ def test_ztb_sparse_mode_matches_reference():
 
 def test_sparse_skips_reduce_traffic_and_psum():
     w = _ternary_w2()
-    dense = execute_workload(CFG, w).trace.totals
-    sparse = execute_workload(CFG, w, ztb_sparsity=0.5).trace.totals
+    dense = Machine(CFG).run(w).trace.totals
+    sparse = Machine(CFG).run(w, ztb_sparsity=0.5).trace.totals
     assert sparse.weight_bytes == pytest.approx(dense.weight_bytes * 0.5)
     assert sparse.act_bytes == pytest.approx(dense.act_bytes * 0.5)
     assert sparse.psum_bytes < dense.psum_bytes
@@ -107,8 +106,8 @@ def test_sparse_skips_reduce_traffic_and_psum():
 
 def test_emulate_cores_bit_exact():
     w = _dense_w8()
-    base = execute_workload(CFG, w)
-    cores = execute_workload(CFG, w, emulate_cores=True)
+    base = Machine(CFG).run(w)
+    cores = Machine(CFG, emulate_cores=True).run(w)
     assert np.array_equal(base.outputs, cores.outputs)
 
 
@@ -116,8 +115,8 @@ def test_accumulator_bank_count_is_associative():
     w = _dense_w8()
     plan = plan_stage(CFG, w)
     x, weights = synthesize_operands(w)
-    one = execute_plan(CFG, plan, x, weights, accumulators=1)
-    many = execute_plan(CFG, plan, x, weights, accumulators=8)
+    one = Machine(CFG, accumulators=1).run(plan, x, weights)
+    many = Machine(CFG, accumulators=8).run(plan, x, weights)
     assert np.array_equal(one.outputs, many.outputs)
 
 
@@ -125,9 +124,9 @@ def test_head_streams_not_deduped_without_shared_input():
     """Distinct per-head inputs cannot ride one broadcast: act traffic must
     scale with the head count, not collapse to one stream per round."""
     base = _ternary_w2()
-    shared = execute_workload(CFG, base).trace.totals
-    private = execute_workload(
-        CFG, dataclasses.replace(base, shared_input=False)
+    shared = Machine(CFG).run(base).trace.totals
+    private = Machine(CFG).run(
+        dataclasses.replace(base, shared_input=False)
     ).trace.totals
     assert private.act_bytes == pytest.approx(shared.act_bytes * CFG.units)
 
@@ -154,11 +153,11 @@ def test_kernel_granularity_pallas_interpret():
     """Whole-slice dispatch through the actual Pallas kernels (interpret)."""
     w2 = GEMMWorkload(stage=QKV_PROJ, m=32, k=256, n=128, weight_bits=2,
                       count=2, shared_input=True, mapping=HEAD_PER_UNIT)
-    execute_workload(CFG, w2, granularity="kernel", kernel_backend="pallas")
+    machine = Machine(CFG, granularity="kernel", kernel_backend="pallas")
+    machine.run(w2)
     w_sp = GEMMWorkload(stage=OUT_PROJ, m=128, k=256, n=1024, weight_bits=2,
                         count=1, mapping=N_PARTITION)
-    res = execute_workload(CFG, w_sp, ztb_sparsity=0.5,
-                           granularity="kernel", kernel_backend="pallas")
+    res = machine.run(w_sp, ztb_sparsity=0.5)
     assert res.mode.backend == BLOCK_SPARSE
 
 
@@ -189,7 +188,7 @@ def test_coverage_error_detected():
 
 def test_undercovered_n_raises():
     """A plan whose slices stop short of N must be rejected, by
-    validate_coverage directly and by execute_plan before running."""
+    validate_coverage directly and by Machine.run before running."""
     w = _dense_w8()
     plan = plan_stage(CFG, w)
     full_n = max(a.n_hi for a in plan.assignments)
@@ -205,7 +204,7 @@ def test_undercovered_n_raises():
         validate_coverage(clipped, n=w.n, count=w.count)
     x, weights = synthesize_operands(w)
     with pytest.raises(PlanCoverageError):
-        execute_plan(CFG, clipped, x, weights)
+        Machine(CFG).run(clipped, x, weights)
 
 
 def test_overlapping_slices_raise():
@@ -233,7 +232,7 @@ def test_k_not_divisible_by_window_pads_correctly():
         a = plan.assignments[0]
         assert a.k_window == CFG.cores * CFG.d
         assert a.k_tiles == 2 and a.k_tiles * a.k_window > w.k
-        execute_workload(CFG, w)       # check_outputs asserts exactness
+        Machine(CFG).run(w)            # check_outputs asserts exactness
 
 
 def test_single_tile_stage_covers_and_matches():
@@ -244,7 +243,7 @@ def test_single_tile_stage_covers_and_matches():
     plan = plan_stage(CFG, w)
     slices = validate_coverage(plan, n=w.n, count=1)
     assert slices[0][0] == (0, 2)      # ceil(16/8 legions) = 2-wide slices
-    res = execute_workload(CFG, w)
+    res = Machine(CFG).run(w)
     assert res.outputs.shape == (1, 8, 16)
 
 
@@ -359,10 +358,8 @@ def test_prefetch_stalls_exposed_under_finite_bandwidth():
     """eq. (2) assumes weight prefetch is fully hidden; with ~0 memory
     bandwidth the double buffer cannot keep up and stalls appear."""
     w = _ternary_w2()
-    hidden = CycleCounter(CFG)
-    execute_workload(CFG, w, cycles=hidden)
-    starved = CycleCounter(CFG, mem_bw_bytes_per_cycle=0.25)
-    execute_workload(CFG, w, cycles=starved)
+    hidden = Machine(CFG).run(w).cycles
+    starved = Machine(CFG, mem_bw_bytes_per_cycle=0.25).run(w).cycles
     assert sum(b.stall for b in hidden.stage_breakdown().values()) == 0
     assert sum(b.stall for b in starved.stage_breakdown().values()) > 0
     assert starved.total_cycles > hidden.total_cycles
