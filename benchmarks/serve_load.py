@@ -18,6 +18,15 @@ would see:
 * ``overlap_x`` — the backend's whole-run pipelining speedup (rides the
   run.py >= 1.0 trajectory gate).
 
+The ``poisson_200_inflight`` row replays the SAME Poisson trace with
+in-flight batching on (``prefill_chunk_tokens=`` chunked prefill merged
+with the decode batch into one Program per step) and ``LiveAdmission``
+gating intake; its p50 TTFT must strictly beat the in-flight-off row,
+and ``refused`` / ``truncated`` ride along so admission or window
+regressions surface in the trend.  ``compare.py``'s direction-aware
+gates track ``p50_*``/``p99_*`` (lower is better) and ``overlap_x``
+(higher is better) across both variants.
+
 A red run means admission, the load clock, or the percentile math
 regressed — the numbers land in ``BENCH_serve_load.json`` and are
 trended by ``benchmarks/compare.py`` in CI.
@@ -35,20 +44,27 @@ MAX_SLOTS = 4
 MAX_SEQ = 64
 
 
-def _fresh(metrics=None):
+def _fresh(metrics=None, *, prefill_chunk_tokens=None, live_admission=False):
     import jax
 
     from repro.configs import get_config, reduced
     from repro.models import build_model
-    from repro.serve import LegionServeBackend, ServeEngine
+    from repro.serve import LegionServeBackend, LiveAdmission, ServeEngine
     from repro.serve.engine import prepare_params
 
     cfg = reduced(get_config("bitnet-1.58b"))
     api = build_model(cfg)
     params = prepare_params(api.init(jax.random.PRNGKey(0)))
-    eng = ServeEngine(api, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
-                      metrics=metrics)
     backend = LegionServeBackend(dlegion(), cfg, params)
+    # a generous budget: the policy runs (and is exercised every step)
+    # without throttling this trace — deferrals/refusals would show up in
+    # the emitted row if the KV math ever regressed
+    admission = LiveAdmission(backend, hbm_bytes_per_chip=8 << 30) \
+        if live_admission else None
+    eng = ServeEngine(api, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+                      metrics=metrics,
+                      prefill_chunk_tokens=prefill_chunk_tokens,
+                      admission=admission)
     backend.attach(eng)
     return eng, backend
 
@@ -98,6 +114,40 @@ def run():
         "p99_tok_kcycles": s["p99_tok_cycles"] / 1e3,
         "mean_occupancy": s["mean_occupancy"],
         "peak_occupancy": s["peak_occupancy"],
+        "overlap_x": backend.summary()["pipeline_speedup"],
+    }))
+
+    # -------- the SAME Poisson trace, in-flight batching switched on ----- #
+    # Chunked prefill merges with the batched decode into one Program per
+    # engine step, and LiveAdmission gates intake on the measured budget.
+    # The acceptance gate: p50 TTFT strictly improves vs the row above —
+    # prefill no longer serializes in front of the decode batch.
+    # budget 24 = two max-length prompts per step: every prompt lands its
+    # first token in one merged step while decode batches ride along
+    eng, backend = _fresh(prefill_chunk_tokens=24, live_admission=True)
+    t0 = time.perf_counter()
+    inflight = run_load(eng, backend, trace)
+    us = (time.perf_counter() - t0) * 1e6 / POISSON_REQUESTS
+    si = inflight.summary()
+    assert si["completed"] == POISSON_REQUESTS, si
+    assert si["refused"] == 0 and si["truncated"] == 0, si
+    assert si["goodput"] == POISSON_REQUESTS, si
+    assert 0 < si["p50_ttft_cycles"] < s["p50_ttft_cycles"], \
+        (si["p50_ttft_cycles"], s["p50_ttft_cycles"])
+    rows.append(emit("serve_load/poisson_200_inflight", us, {
+        "requests": si["requests"],
+        "completed": si["completed"],
+        "rejected": si["rejected"],
+        "deferred": si["deferred"],
+        "refused": si["refused"],
+        "truncated": si["truncated"],
+        "decode_tokens": si["decode_tokens"],
+        "p50_ttft_kcycles": si["p50_ttft_cycles"] / 1e3,
+        "p99_ttft_kcycles": si["p99_ttft_cycles"] / 1e3,
+        "p50_tok_kcycles": si["p50_tok_cycles"] / 1e3,
+        "p99_tok_kcycles": si["p99_tok_cycles"] / 1e3,
+        "mean_occupancy": si["mean_occupancy"],
+        "peak_occupancy": si["peak_occupancy"],
         "overlap_x": backend.summary()["pipeline_speedup"],
     }))
 

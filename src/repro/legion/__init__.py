@@ -50,6 +50,7 @@ from repro.legion.program import (
     compute_pipeline,
     lower_attention,
     lower_serve_batch,
+    lower_serve_mixed,
     lower_serve_step,
     reference_outputs,
     requantize_int8,
@@ -97,6 +98,7 @@ __all__ = [
     "cross_validate_cycles",
     "lower_attention",
     "lower_serve_batch",
+    "lower_serve_mixed",
     "lower_serve_step",
     "merge_round_criticals",
     "prepare_context",

@@ -1103,3 +1103,69 @@ def lower_serve_batch(
         heads=heads, kv_heads=kv_heads, head_dim=head_dim, layers=layers,
         seed=seed, explicit_layers=explicit_layers,
     )
+
+
+def lower_serve_mixed(
+    projections: Sequence,
+    *,
+    chunks: Sequence[Tuple[int, int]],
+    decode_contexts: Sequence[int] = (),
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    layers: int = 1,
+    seed: int = 0,
+    operands: bool = True,
+) -> Program:
+    """One *mixed-phase* engine step: in-flight prefill chunks merged with
+    the batched decode slots into a single step graph.
+
+    ``chunks`` gives each active prefill chunk's ``(rows, context)`` shape
+    — ``rows`` prompt tokens written this step, attending ``context``
+    cache entries (the chunk's start offset plus its rows; earlier chunks
+    of the same prompt already sit in the cache).  ``decode_contexts`` is
+    the usual per-slot context tuple of the step's batched decode (empty
+    when every slot is still prefilling).  Each phase lowers through
+    :func:`lower_serve_step` and the parts merge via :meth:`Program.merge`
+    with ``{p<i>}`` / ``{d}`` name tags — the TensorRT-LLM in-flight
+    batching shape: context-phase and generation-phase work share one
+    scheduled graph, so :func:`compute_pipeline` overlaps chunk rounds
+    against decode rounds exactly as it does across decode slots.
+
+    ``operands=False`` builds the schedulable skeleton (the serve
+    backend's per-step hot path); with operands the merged graph is
+    executable and its measured traffic/cycles equal the sum of its
+    phase parts.
+    """
+    chunks = tuple((int(r), int(t)) for r, t in chunks)
+    decode_contexts = tuple(int(t) for t in decode_contexts)
+    if not chunks and not decode_contexts:
+        raise ValueError(
+            "lower_serve_mixed needs at least one prefill chunk or decode "
+            "slot"
+        )
+    for rows, t in chunks:
+        if rows < 1 or t < rows:
+            raise ValueError(
+                f"chunk ({rows}, {t}): need rows >= 1 and context >= rows "
+                f"(a chunk attends at least its own rows)"
+            )
+    parts: List[Program] = []
+    tags: List[str] = []
+    for i, (rows, t) in enumerate(chunks):
+        parts.append(lower_serve_step(
+            projections, m=rows, contexts=(t,), heads=heads,
+            kv_heads=kv_heads, head_dim=head_dim, layers=layers,
+            seed=seed, operands=operands,
+        ))
+        tags.append(f"{{p{i}}}")
+    if decode_contexts:
+        parts.append(lower_serve_step(
+            projections, m=len(decode_contexts), contexts=decode_contexts,
+            heads=heads, kv_heads=kv_heads, head_dim=head_dim,
+            layers=layers, seed=seed, operands=operands,
+        ))
+        tags.append("{d}")
+    merged = Program.merge(parts, tags=tags)
+    merged.validate()
+    return merged

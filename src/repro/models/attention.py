@@ -317,7 +317,13 @@ def attention(
         new_cache = KVCache(kc, vc)
         kt = kc.transpose(0, 2, 1, 3)     # [B, S_max, Hkv, hd]
         vt = vc.transpose(0, 2, 1, 3)
-        out = _sdpa(q, kt, vt, causal=False, kv_len=kv_len)
+        if s > 1 and jnp.ndim(cache_pos) == 0:
+            # prefill chunk staged at [cache_pos, cache_pos + s): causal
+            # masking against global positions — earlier chunks already
+            # sit in the cache below cache_pos, later rows mask out.
+            out = _sdpa(q, kt, vt, causal=True, q_offset=cache_pos)
+        else:
+            out = _sdpa(q, kt, vt, causal=False, kv_len=kv_len)
     elif cache is not None:
         # prefill: fill cache [0, S), causal attention over the prompt
         kc = jax.lax.dynamic_update_slice(

@@ -21,6 +21,9 @@ class ModelAPI:
     init_cache: Callable           # (batch, max_seq) -> cache
     prefill: Callable              # (params, batch, cache) -> (logits, cache)
     decode: Optional[Callable]     # (params, token, cache, pos) -> (logits, cache)
+    # (params, tokens [B,C], cache, pos0) -> (logits, cache); chunked
+    # in-flight prefill — only decoder transformers support it today.
+    prefill_chunk: Optional[Callable] = None
 
 
 def _transformer_api(cfg) -> ModelAPI:
@@ -33,10 +36,18 @@ def _transformer_api(cfg) -> ModelAPI:
         return cross_entropy(logits, targets)
 
     decode = None
+    prefill_chunk = None
     if cfg.is_decoder:
         decode = lambda params, token, cache, pos: transformer.forward_decode(
             cfg, params, token, cache, pos
         )
+        if cfg.frontend not in ("audio_frames", "vision_patches"):
+            prefill_chunk = (
+                lambda params, tokens, cache, pos0:
+                transformer.forward_prefill_chunk(
+                    cfg, params, tokens, cache, pos0
+                )
+            )
     return ModelAPI(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -51,6 +62,7 @@ def _transformer_api(cfg) -> ModelAPI:
             cfg, params, batch, cache
         ),
         decode=decode,
+        prefill_chunk=prefill_chunk,
     )
 
 

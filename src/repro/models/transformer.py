@@ -204,6 +204,27 @@ def _scan_blocks_prefill(cfg, blocks, x, positions, caches):
     return x, KVCache(ks, vs)
 
 
+def forward_prefill_chunk(cfg, params, tokens, cache: KVCache, pos0):
+    """One fixed-budget slice of an in-flight prefill.
+
+    tokens [B, C] int32, ``pos0`` scalar: writes cache[:, :, :, pos0:pos0+C)
+    and attends causally over everything at or below each chunk position —
+    earlier chunks already live in the cache below ``pos0``.  Returns
+    (last_logits [B, 1, V], new_cache); the logits are only meaningful on a
+    prompt's final chunk.  Chaining chunks is bit-exact with
+    ``forward_prefill`` over the whole prompt.
+    """
+    x = params["embed"]["tokens"][tokens]
+    b, c = tokens.shape
+    positions = jnp.broadcast_to(
+        (pos0 + jnp.arange(c, dtype=jnp.int32))[None], (b, c)
+    )
+    x, new_cache = _scan_blocks(cfg, params["blocks"], x, positions,
+                                caches=cache, cache_pos=pos0)
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return logits, new_cache
+
+
 def forward_decode(cfg, params, token, cache: KVCache, pos):
     """One decode step. token [B] int32, pos scalar or per-slot [B] int32.
 

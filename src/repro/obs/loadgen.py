@@ -12,7 +12,13 @@ cycles from :meth:`~repro.serve.legion_backend.LegionServeBackend
 .step_pipeline` — so hundreds of requests produce p50/p99 TTFT and
 per-token latencies in model cycles (and microseconds at the
 accelerator's clock), with occupancy-over-time and rejected/deferred
-admission counts alongside.
+admission counts alongside.  In-flight engines
+(``prefill_chunk_tokens=``) emit one merged ``step`` event per engine
+step, priced by the merged mixed-phase Program's overlapped cycles
+(:meth:`~repro.serve.legion_backend.LegionServeBackend
+.step_pipeline_mixed`); window-truncated completions and
+admission-refused requests surface in :meth:`LoadReport.summary` as
+``truncated`` / ``refused`` (with ``goodput`` excluding truncations).
 
 The backend's compositional caches make this cheap: a 200-request trace
 re-executes only previously unseen (rows, context) attention pairs; the
@@ -100,6 +106,9 @@ class RequestRecord:
     decode_tokens: int = 0
     rejected: bool = False
     deferred: bool = False     # submitted while no slot was free
+    # Post-mapped from the engine after the replay drains:
+    refused: bool = False      # admission policy refused it (never ran)
+    truncated: bool = False    # ended by the cache window, not EOS/budget
 
     @property
     def ttft(self) -> Optional[float]:
@@ -140,11 +149,17 @@ class LoadReport:
                    if r.cycles_per_token is not None]
         slots = [e["slots"] for e in self.occupancy]
         decode_tokens = sum(r.decode_tokens for r in comp)
+        truncated = sum(1 for r in comp if r.truncated)
         out: Dict[str, float] = {
             "requests": len(self.records),
             "completed": len(comp),
             "rejected": self.rejected,
             "deferred": self.deferred,
+            "refused": sum(1 for r in self.records if r.refused),
+            # window-truncated outputs are NOT successes: report them
+            # separately and keep goodput to the naturally-completed set
+            "truncated": truncated,
+            "goodput": len(comp) - truncated,
             "decode_tokens": decode_tokens,
             "makespan_cycles": self.clock,
             "mean_occupancy": (sum(slots) / len(slots)) if slots else 0.0,
@@ -180,6 +195,11 @@ def run_load(
     full queue are **rejected** (never submitted), and any request
     submitted while all slots are busy counts as **deferred**.
 
+    In-flight engines emit merged ``step`` events: the clock advances by
+    the overlapped cycles of the merged prefill-chunk + decode Program.
+    After the replay drains, ``Request.truncated`` and admission
+    refusals are mapped back onto the records.
+
     ``metrics`` (optional, e.g. :class:`repro.obs.metrics
     .MetricsRegistry`) receives ``load_*`` counters/histograms as the
     replay progresses.
@@ -199,6 +219,8 @@ def run_load(
             state["clock"] += cost
             rec = by_uid[event["uid"]]
             rec.first_token = state["clock"]
+            if event.get("done"):     # finished at its prompt boundary
+                rec.finish = state["clock"]
             occupancy.append({"clock": state["clock"], "phase": "prefill",
                               "slots": len(engine._active())})
             if metrics is not None:
@@ -219,6 +241,38 @@ def run_load(
                 metrics.histogram("load_decode_step_cycles") \
                     .observe(overlapped)
                 metrics.histogram("load_decode_batch").observe(len(uids))
+        elif event["kind"] == "step":
+            # in-flight: ONE merged step carries prefill chunks + decode;
+            # the clock advances by the merged graph's overlapped cycles
+            chunks = event["chunks"]
+            uids = event["uids"]
+            contexts = tuple(sorted(p + 1 for p in event["positions"]))
+            shapes = tuple((c["tokens"], c["pos0"] + c["tokens"])
+                           for c in chunks)
+            _serial, overlapped = backend.step_pipeline_mixed(
+                shapes, decode_m=len(uids), decode_contexts=contexts)
+            state["clock"] += overlapped
+            for c in chunks:
+                if not c.get("last"):
+                    continue
+                rec = by_uid[c["uid"]]
+                rec.first_token = state["clock"]
+                if c.get("done"):      # finished at its prompt boundary
+                    rec.finish = state["clock"]
+                if metrics is not None:
+                    metrics.histogram("load_ttft_cycles").observe(rec.ttft)
+            for uid in uids:
+                rec = by_uid[uid]
+                rec.decode_tokens += 1
+                rec.finish = state["clock"]
+            engaged = set(uids) | {c["uid"] for c in chunks}
+            occupancy.append({"clock": state["clock"], "phase": "step",
+                              "slots": len(engaged)})
+            if metrics is not None:
+                metrics.histogram("load_step_cycles").observe(overlapped)
+                if uids:
+                    metrics.histogram("load_decode_batch") \
+                        .observe(len(uids))
 
     engine.step_observers.append(observe)
     rejected = deferred = 0
@@ -268,6 +322,18 @@ def run_load(
                 )
     finally:
         engine.step_observers.remove(observe)
+
+    # post-map terminal flags the events don't carry: window truncation
+    # (Request.truncated) and admission refusals (engine.refused)
+    done_reqs = {r.uid: r for r in engine.finished}
+    for uid, rec in by_uid.items():
+        req = done_reqs.get(uid)
+        if req is not None and req.truncated:
+            rec.truncated = True
+    for req in getattr(engine, "refused", ()):
+        rec = by_uid.get(req.uid)
+        if rec is not None:
+            rec.refused = True
 
     if metrics is not None:
         metrics.counter("load_requests").inc(len(records))

@@ -30,6 +30,14 @@ microsecond == 1 model cycle — the viewer's unit label, not wall time).
 Byte counts in slice args are raw per-pass bytes (pre NoC-dedup — the
 :class:`~repro.legion.trace.TrafficTracer` owns deduplicated totals).
 
+Both parity guarantees hold for ANY program shape the scheduler accepts
+— including the in-flight serve path's *mixed-phase* steps
+(:meth:`~repro.serve.legion_backend.LegionServeBackend
+.step_program_mixed`: prefill-chunk subgraphs merged with a batched
+decode graph), whose serial/overlapped makespans the tracer reproduces
+exactly like pure decode batches (pinned by
+``tests/test_obs.py::test_mixed_step_program_trace_parity``).
+
 Register the tracer as a session instrument so the per-stage fresh
 counters (and hence the pipeline schedule) still run::
 

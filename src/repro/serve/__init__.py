@@ -2,7 +2,14 @@
 Legion accelerator backend (per-step GEMM graphs through a
 ``repro.legion.Machine`` session, with the engine-view overlapped
 latency of each decode batch's merged Program).
+
+In-flight batching (``ServeEngine(prefill_chunk_tokens=...)``) chunks
+prefill into fixed token-budget slices and merges them with the batched
+decode slots into ONE Program per engine step; ``LiveAdmission`` gates
+request intake on the measured ``cache_budget()`` and overlapped token
+rate.
 """
+from repro.serve.admission import AdmissionStats, LiveAdmission
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kv_cache import CacheBudget, kv_bytes_per_token
 from repro.serve.legion_backend import (
@@ -15,8 +22,10 @@ from repro.serve.legion_backend import (
 )
 
 __all__ = [
+    "AdmissionStats",
     "CacheBudget",
     "LegionServeBackend",
+    "LiveAdmission",
     "ProjectionOp",
     "Request",
     "RequestTally",

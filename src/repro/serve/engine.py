@@ -26,12 +26,22 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Ended by the cache window (slot.pos hit max_seq), not by EOS or the
+    # token budget — a cut-off output, not a natural completion.
+    truncated: bool = False
+    # Refused by the admission policy (never prefilled; no output).
+    refused: bool = False
 
 
 @dataclasses.dataclass
 class _Slot:
     request: Optional[Request] = None
     pos: int = 0                       # next write position in the cache
+    # In-flight (chunked) prefill state: prompt tokens already written into
+    # the staging cache, and the single-lane staging cache itself (None
+    # once the slot is decode-ready or free).
+    filled: int = 0
+    staging: object = None
 
 
 def prepare_params(params, *, ternary: bool = True):
@@ -61,9 +71,22 @@ class ServeEngine:
     def __init__(self, api, params, *, max_slots: int = 4,
                  max_seq: int = 512, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
-                 metrics=None):
+                 metrics=None, prefill_chunk_tokens: Optional[int] = None,
+                 admission=None):
         if api.decode is None:
             raise ValueError(f"{api.cfg.name} is encoder-only; no decode")
+        if prefill_chunk_tokens is not None:
+            if prefill_chunk_tokens < 1:
+                raise ValueError(
+                    f"prefill_chunk_tokens must be >= 1, got "
+                    f"{prefill_chunk_tokens}"
+                )
+            if getattr(api, "prefill_chunk", None) is None:
+                raise ValueError(
+                    f"{api.cfg.name} has no chunked prefill "
+                    f"(api.prefill_chunk is None); only decoder "
+                    f"transformers support in-flight batching"
+                )
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -77,16 +100,39 @@ class ServeEngine:
         self._next_uid = 0
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        # Requests the admission policy refused outright (never prefilled;
+        # not in ``finished`` — refusal is not a completion).
+        self.refused: List[Request] = []
+        # In-flight batching: chunk prefill into fixed token-budget slices
+        # and merge them with the batched decode slots into ONE engine step
+        # (TensorRT-LLM's in-flight batching).  None = legacy mode: whole
+        # prompts prefill alone at admission.
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        # Live admission policy (duck-typed: ``decide(engine, request) ->
+        # "admit" | "defer" | "refuse"``, e.g. repro.serve.admission
+        # .LiveAdmission).  None admits whenever a slot is free.
+        self.admission = admission
         # Step observers: called after every prefill / batched decode with a
         # small event dict — the hook accelerator backends attach to (e.g.
         # repro.serve.legion_backend drives the projection GEMMs of each
         # step through the Legion runtime for traffic/cycle tallies).
-        #   {"kind": "prefill", "uid": int, "tokens": prompt_len}
+        #   {"kind": "prefill", "uid": int, "tokens": prompt_len,
+        #    "done": bool}              # completed at its prompt boundary
         #   {"kind": "decode",  "uids": [int, ...], "tokens": 1,
         #    "positions": [int, ...]}   # per-slot cache write position —
         #                               # the step attended pos+1 entries
         #                               # (context length for act-to-act
         #                               # attention lowering)
+        # In-flight mode emits ONE merged event per engine step instead:
+        #   {"kind": "step",
+        #    "chunks": [{"uid", "tokens", "pos0", "last", "done"}, ...],
+        #    "uids": [...], "tokens": 1, "positions": [...]}
+        # where each chunk wrote ``tokens`` prompt tokens at offset
+        # ``pos0`` (attending pos0+tokens cache entries), "last" marks a
+        # prompt-completing chunk and "done" a request that finished at
+        # admission (EOS / budget / window) without taking a decode slot;
+        # "uids"/"positions" are the step's batched decode exactly as in
+        # the legacy decode event.
         self.step_observers: List[Callable[[dict], None]] = []
         # Batch occupancy per decode step (len(uids) of each event): how
         # full the continuous batch actually ran — the denominator behind
@@ -104,51 +150,144 @@ class ServeEngine:
             lambda params, tok, cache, pos: api.decode(params, tok, cache,
                                                        pos)
         )
+        self._prefill_chunk = None
+        if prefill_chunk_tokens is not None:
+            # jit caches by chunk shape; the fixed budget bounds the set of
+            # chunk lengths (budget + the per-prompt remainders)
+            self._prefill_chunk = jax.jit(
+                lambda params, toks, cache, pos0: api.prefill_chunk(
+                    params, toks, cache, pos0)
+            )
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"prompt must be a non-empty 1-D token array; got shape "
+                f"{prompt.shape}"
+            )
+        if len(prompt) > self.max_seq:
+            # dynamic_update_slice would clamp the cache write and the
+            # engine would decode over a corrupted lane — reject up front
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds max_seq="
+                f"{self.max_seq}; it can never fit a cache lane"
+            )
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}"
+            )
         # monotonic uid: len(queue)+len(finished) collides once requests sit
         # in slots (neither queued nor finished), merging distinct requests
         # wherever uid keys a map (e.g. legion_backend.per_request)
-        req = Request(uid=self._next_uid,
-                      prompt=np.asarray(prompt, np.int32),
+        req = Request(uid=self._next_uid, prompt=prompt,
                       max_new_tokens=max_new_tokens, eos_id=eos_id)
         self._next_uid += 1
         self.queue.append(req)
         return req
 
     # ------------------------------------------------------------------ #
-    def _admit(self):
-        """Fill free slots from the queue; prefill each admitted request."""
-        for i, slot in enumerate(self.slots):
-            if slot.request is not None or not self.queue:
+    def _next_admittable(self) -> Optional[Request]:
+        """Pop the next queue entry past the admission policy.
+
+        Refusals pop, flag, and land in :attr:`refused`; a deferral stops
+        admission for this step (the queue head stays put).  Both are
+        counted in ``step_log`` and the metrics registry.
+        """
+        while self.queue:
+            req = self.queue[0]
+            action = ("admit" if self.admission is None
+                      else self.admission.decide(self, req))
+            if action == "admit":
+                return self.queue.pop(0)
+            if action == "refuse":
+                self.queue.pop(0)
+                req.refused = True
+                req.done = True
+                self.refused.append(req)
+                self.step_log.append({"phase": "refuse", "uid": req.uid,
+                                      "tokens": len(req.prompt),
+                                      "slots": len(self._active())})
+                if self.metrics is not None:
+                    self.metrics.counter("serve_admission_refused").inc()
                 continue
-            req = self.queue.pop(0)
-            plen = len(req.prompt)
-            # single-request prefill into this slot's cache lane
-            single_cache = self.api.init_cache(1, self.max_seq)
-            logits, single_cache = self.api.prefill(
-                self.params,
-                {"tokens": jnp.asarray(req.prompt[None, :])},
-                single_cache,
+            if action == "defer":
+                self.step_log.append({"phase": "defer", "uid": req.uid,
+                                      "tokens": len(req.prompt),
+                                      "slots": len(self._active())})
+                if self.metrics is not None:
+                    self.metrics.counter("serve_admission_deferred").inc()
+                return None
+            raise ValueError(
+                f"admission policy returned {action!r}; expected 'admit', "
+                f"'defer' or 'refuse'"
             )
-            self.cache = _write_slot(self.cache, single_cache, i)
-            tok = self._sample(logits[:, -1])
-            req.output.append(int(tok[0]))
-            slot.request = req
-            slot.pos = plen
-            self.step_log.append({"phase": "prefill", "uid": req.uid,
-                                  "tokens": plen,
-                                  "slots": len(self._active())})
-            if self.metrics is not None:
-                self.metrics.counter("serve_prefill_steps").inc()
+        return None
+
+    def _first_token(self, req: Request, tok: int, plen: int) -> bool:
+        """Record the prefill-sampled token and apply the prompt-boundary
+        completion rules: EOS sampled at prefill, a 1-token budget, or a
+        prompt filling the whole cache window all finish the request here —
+        it never occupies a decode slot.  Returns True if finished."""
+        req.output.append(tok)
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        full = plen >= self.max_seq   # no cache row left for a decode write
+        if req.max_new_tokens <= 1 or hit_eos or full:
+            req.done = True
+            req.truncated = full and not hit_eos and req.max_new_tokens > 1
+            self.finished.append(req)
+            return True
+        return False
+
+    def _log_prefill(self, req: Request, plen: int, *,
+                     count_tokens: bool = True) -> None:
+        self.step_log.append({"phase": "prefill", "uid": req.uid,
+                              "tokens": plen,
+                              "slots": len(self._active())})
+        if self.metrics is not None:
+            self.metrics.counter("serve_prefill_steps").inc()
+            if count_tokens:
                 self.metrics.counter("serve_prefill_tokens").inc(plen)
-                self.metrics.histogram("serve_prompt_tokens").observe(plen)
-                self.metrics.gauge("serve_slot_occupancy").set(
-                    len(self._active()) / self.max_slots)
-            self._notify({"kind": "prefill", "uid": req.uid,
-                          "tokens": plen})
+            self.metrics.histogram("serve_prompt_tokens").observe(plen)
+            self.metrics.gauge("serve_slot_occupancy").set(
+                len(self._active()) / self.max_slots)
+
+    def _admit(self):
+        """Fill free slots from the queue; prefill each admitted request.
+
+        Legacy (whole-prompt) path: each admitted prompt prefills alone.
+        Requests finishing at their prompt boundary (see
+        :meth:`_first_token`) complete here and leave the slot free for
+        the next queue entry.
+        """
+        for i, slot in enumerate(self.slots):
+            if slot.request is not None:
+                continue
+            while True:
+                req = self._next_admittable()
+                if req is None:
+                    return
+                plen = len(req.prompt)
+                # single-request prefill into this slot's cache lane
+                single_cache = self.api.init_cache(1, self.max_seq)
+                logits, single_cache = self.api.prefill(
+                    self.params,
+                    {"tokens": jnp.asarray(req.prompt[None, :])},
+                    single_cache,
+                )
+                tok = self._sample(logits[:, -1])
+                finished = self._first_token(req, int(tok[0]), plen)
+                if not finished:
+                    self.cache = _write_slot(self.cache, single_cache, i)
+                    slot.request = req
+                    slot.pos = plen
+                self._log_prefill(req, plen)
+                self._notify({"kind": "prefill", "uid": req.uid,
+                              "tokens": plen, "done": finished})
+                if not finished:
+                    break          # slot taken; move to the next free one
 
     def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
         if self.greedy:
@@ -167,11 +306,21 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ #
     def step(self):
-        """One batched decode step across all active slots."""
-        self._admit()
-        active = self._active()
-        if not active:
-            return False
+        """One engine step.
+
+        Legacy mode: whole-prompt prefill at admission + one batched
+        decode across the active slots.  In-flight mode
+        (``prefill_chunk_tokens=``): prefill chunks and the batched decode
+        run as ONE merged step (a single ``{"kind": "step"}`` event — the
+        backend schedules both phases through one merged Program).
+        """
+        if self.prefill_chunk_tokens is not None:
+            return self._step_inflight()
+        return self._step_legacy()
+
+    def _decode_step(self, active: List[int]):
+        """Run the batched decode over ``active`` slot indices; returns
+        the step logits (sampling happens after observers fire)."""
         tokens = np.zeros((self.max_slots,), np.int32)
         pos = np.zeros((self.max_slots,), np.int32)
         for i in active:
@@ -183,28 +332,127 @@ class ServeEngine:
         )
         self.decode_batch_sizes.append(len(active))
         self.step_log.append({"phase": "decode", "tokens": len(active),
-                              "slots": len(active)})
+                              "slots": len(self._active())})
         if self.metrics is not None:
             self.metrics.counter("serve_decode_steps").inc()
             self.metrics.counter("serve_decode_tokens").inc(len(active))
             self.metrics.histogram("serve_batch_size").observe(len(active))
             self.metrics.gauge("serve_slot_occupancy").set(
-                len(active) / self.max_slots)
-        self._notify({"kind": "decode", "tokens": 1,
-                      "uids": [self.slots[i].request.uid for i in active],
-                      "positions": [int(self.slots[i].pos) for i in active]})
-        next_tok = np.asarray(self._sample(logits[:, -1]))
+                len(self._active()) / self.max_slots)
+        return logits
+
+    def _finish_decoded(self, active: List[int], next_tok) -> None:
+        """Append sampled tokens and retire finished slots — EOS and
+        token-budget completions, plus window truncations
+        (``Request.truncated``) when ``slot.pos`` hits the cache edge."""
         for i in active:
             slot = self.slots[i]
             req = slot.request
             req.output.append(int(next_tok[i]))
             slot.pos += 1
             hit_eos = req.eos_id is not None and next_tok[i] == req.eos_id
-            if (len(req.output) >= req.max_new_tokens or hit_eos
-                    or slot.pos >= self.max_seq - 1):
+            full = slot.pos >= self.max_seq - 1
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
                 req.done = True
+                req.truncated = (full and not hit_eos
+                                 and len(req.output) < req.max_new_tokens)
                 self.finished.append(req)
                 slot.request = None
+                slot.pos = 0
+
+    def _step_legacy(self):
+        """One batched decode step across all active slots."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return False
+        logits = self._decode_step(active)
+        self._notify({"kind": "decode", "tokens": 1,
+                      "uids": [self.slots[i].request.uid for i in active],
+                      "positions": [int(self.slots[i].pos) for i in active]})
+        next_tok = np.asarray(self._sample(logits[:, -1]))
+        self._finish_decoded(active, next_tok)
+        return True
+
+    # ------------------------------------------------------------------ #
+    # In-flight batching: prefill chunks + decode in one merged step
+    # ------------------------------------------------------------------ #
+    def _admit_inflight(self):
+        """Assign free slots to queued requests (admission-gated) without
+        running any prefill — chunks advance inside the merged step."""
+        for slot in self.slots:
+            if slot.request is not None:
+                continue
+            req = self._next_admittable()
+            if req is None:
+                return
+            slot.request = req
+            slot.pos = 0
+            slot.filled = 0
+            slot.staging = self.api.init_cache(1, self.max_seq)
+
+    def _advance_chunks(self) -> List[dict]:
+        """Advance every prefilling slot by one chunk, oldest slot first,
+        until the step's ``prefill_chunk_tokens`` budget is spent."""
+        budget = self.prefill_chunk_tokens
+        chunks: List[dict] = []
+        for i, slot in enumerate(self.slots):
+            if budget <= 0:
+                break
+            req = slot.request
+            if req is None or slot.staging is None:
+                continue
+            plen = len(req.prompt)
+            c = min(budget, plen - slot.filled)
+            pos0 = slot.filled
+            toks = jnp.asarray(req.prompt[None, pos0:pos0 + c])
+            logits, slot.staging = self._prefill_chunk(
+                self.params, toks, slot.staging, pos0)
+            slot.filled += c
+            budget -= c
+            self.step_log.append({"phase": "prefill_chunk", "uid": req.uid,
+                                  "tokens": c,
+                                  "slots": len(self._active())})
+            if self.metrics is not None:
+                self.metrics.counter("serve_prefill_chunks").inc()
+                self.metrics.counter("serve_prefill_tokens").inc(c)
+            last = slot.filled >= plen
+            done = False
+            if last:
+                tok = self._sample(logits[:, -1])
+                done = self._first_token(req, int(tok[0]), plen)
+                if done:
+                    slot.request = None
+                else:
+                    # decode-ready: land the staged lane in the batch cache
+                    self.cache = _write_slot(self.cache, slot.staging, i)
+                    slot.pos = plen
+                slot.staging = None
+                slot.filled = 0
+                self._log_prefill(req, plen, count_tokens=False)
+            chunks.append({"uid": req.uid, "tokens": c, "pos0": pos0,
+                           "last": last, "done": done})
+        return chunks
+
+    def _step_inflight(self):
+        """One in-flight step: admit, advance prefill chunks under the
+        token budget, batch-decode the decode-ready slots, and emit a
+        single merged ``step`` event covering both phases."""
+        self._admit_inflight()
+        chunks = self._advance_chunks()
+        active = [i for i in self._active()
+                  if self.slots[i].staging is None]
+        if not chunks and not active:
+            return False
+        logits = self._decode_step(active) if active else None
+        self._notify({
+            "kind": "step", "chunks": chunks, "tokens": 1,
+            "uids": [self.slots[i].request.uid for i in active],
+            "positions": [int(self.slots[i].pos) for i in active],
+        })
+        if active:
+            next_tok = np.asarray(self._sample(logits[:, -1]))
+            self._finish_decoded(active, next_tok)
         return True
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:

@@ -60,6 +60,7 @@ from repro.legion.program import (
     ProgramStage,
     Ref,
     compute_pipeline,
+    lower_serve_mixed,
     lower_serve_step,
     softmax_int8,
 )
@@ -72,6 +73,7 @@ MLP_DOWN = "mlp_down"    # w2:      [d_ff, d_model]
 
 PREFILL = "prefill"
 DECODE = "decode"
+STEP = "step"            # in-flight: prefill chunks + decode, one event
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,8 +325,19 @@ class LegionServeBackend:
                            List[CycleBreakdown]] = {}
         self._pipeline_cache: Dict[Tuple[int, Tuple[int, ...]],
                                    Tuple[int, int]] = {}
-        self._engine_serial_cycles = 0       # batched decode steps, serial
+        self._mixed_cache: Dict[tuple, Tuple[int, int]] = {}
+        # Engine-view accumulators.  ``engine_steps`` counts the steps the
+        # merged-graph schedule priced: every batched decode step in
+        # legacy mode, every mixed (chunks + decode) step in in-flight
+        # mode — so *_cycles_per_step covers prefill once chunks merge in.
+        self.engine_steps = 0
+        self._engine_serial_cycles = 0       # engine-view steps, serial
         self._engine_overlapped_cycles = 0   # same steps, pipelined
+        # Decode-only engine view: the per-decode-token overlapped rate
+        # (what cache_budget feeds kv_cache.plan) must not absorb prefill
+        # cycles when mixed steps carry both phases.
+        self._decode_serial_cycles = 0
+        self._decode_overlapped_cycles = 0
 
     # ------------------------------------------------------------------ #
     def attach(self, engine) -> "LegionServeBackend":
@@ -362,25 +375,76 @@ class LegionServeBackend:
             # pipelined schedule: per-slot attention rounds interleave, so
             # the engine-view latency is the overlapped one
             serial, overlapped = self.step_pipeline(len(uids), batch_ctx)
+            self.engine_steps += 1
             self._engine_serial_cycles += serial
             self._engine_overlapped_cycles += overlapped
-            if self.metrics is not None:
-                m = self.metrics
-                m.counter("serve_backend_serial_cycles").inc(serial)
-                m.counter("serve_backend_overlapped_cycles").inc(overlapped)
-                m.histogram("serve_step_overlap_x").observe(
-                    serial / overlapped if overlapped else 1.0)
-            # request view: each token's standalone m=1 cost at its context
-            for uid, t in zip(uids, contexts):
-                tally = self.step_tally(1, self._ctx((t,)))
-                req = self._request(uid)
-                req.decode_tokens += 1
+            self._decode_serial_cycles += serial
+            self._decode_overlapped_cycles += overlapped
+            self._record_step_metrics(serial, overlapped)
+            self._attribute_decode(uids, contexts)
+        elif event["kind"] == STEP:
+            # in-flight: prefill chunks + the batched decode, one merged
+            # step.  Tallies accumulate part-wise (the parts' caches also
+            # hold every round the merged schedule needs); the engine view
+            # prices the step as ONE merged mixed-phase graph.
+            chunks = event.get("chunks", ())
+            uids = event.get("uids", ())
+            positions = event.get("positions", ())
+            contexts = tuple(p + 1 for p in positions) \
+                if len(positions) == len(uids) else (1,) * len(uids)
+            batch_ctx = tuple(sorted(contexts))
+            shapes = []
+            for ch in chunks:
+                rows = ch["tokens"]
+                t = ch["pos0"] + rows        # chunk attends its prefix too
+                shapes.append((rows, t))
+                self.prefill_steps += 1
+                tally = self.step_tally(rows, self._ctx((t,)))
+                self.totals.merge(tally)
+                req = self._request(ch["uid"])
+                req.prefill_tokens += rows
                 req.add(tally)
-                self._decode_cycles += tally.cycles
-                self._decode_tokens += 1
-            if self.metrics is not None and self._decode_tokens:
-                self.metrics.gauge("serve_cycles_per_decode_token").set(
-                    self._decode_cycles / self._decode_tokens)
+                if self.metrics is not None:
+                    self.metrics.counter("serve_backend_prefill_cycles") \
+                        .inc(tally.cycles)
+            if uids:
+                self.decode_steps += 1
+                self.totals.merge(
+                    self.step_tally(len(uids), self._ctx(batch_ctx)))
+                d_serial, d_overlapped = self.step_pipeline(
+                    len(uids), batch_ctx)
+                self._decode_serial_cycles += d_serial
+                self._decode_overlapped_cycles += d_overlapped
+                self._attribute_decode(uids, contexts)
+            serial, overlapped = self.step_pipeline_mixed(
+                shapes, decode_m=len(uids), decode_contexts=batch_ctx)
+            self.engine_steps += 1
+            self._engine_serial_cycles += serial
+            self._engine_overlapped_cycles += overlapped
+            self._record_step_metrics(serial, overlapped)
+
+    def _attribute_decode(self, uids, contexts) -> None:
+        """Per-request standalone attribution: each decode token's own
+        m=1 step cost at its context."""
+        for uid, t in zip(uids, contexts):
+            tally = self.step_tally(1, self._ctx((t,)))
+            req = self._request(uid)
+            req.decode_tokens += 1
+            req.add(tally)
+            self._decode_cycles += tally.cycles
+            self._decode_tokens += 1
+        if self.metrics is not None and self._decode_tokens:
+            self.metrics.gauge("serve_cycles_per_decode_token").set(
+                self._decode_cycles / self._decode_tokens)
+
+    def _record_step_metrics(self, serial: int, overlapped: int) -> None:
+        if self.metrics is None:
+            return
+        m = self.metrics
+        m.counter("serve_backend_serial_cycles").inc(serial)
+        m.counter("serve_backend_overlapped_cycles").inc(overlapped)
+        m.histogram("serve_step_overlap_x").observe(
+            serial / overlapped if overlapped else 1.0)
 
     def _request(self, uid: int) -> RequestTally:
         return self.per_request.setdefault(uid, RequestTally(uid=uid))
@@ -564,6 +628,149 @@ class LegionServeBackend:
             self._pipeline_cache[key] = cached
         return cached
 
+    def step_pipeline_mixed(
+        self, chunks: Sequence[Tuple[int, int]], *, decode_m: int = 0,
+        decode_contexts: Sequence[int] = (),
+    ) -> Tuple[int, int]:
+        """One *mixed* (in-flight) step's engine-view ``(serial,
+        overlapped)`` cycles: every prefill chunk's subgraph merged with
+        the batched decode graph and scheduled as one pipelined step.
+
+        ``chunks`` are ``(rows, context)`` shapes (context = chunk offset
+        + rows); ``decode_contexts`` the decode slots' context tuple
+        (``decode_m`` defaults to its length).  Like
+        :meth:`step_pipeline`, nothing re-executes: the part-wise
+        ``step_tally`` calls populate the per-shape round caches and the
+        merged skeleton graph (``lower_serve_mixed(..., operands=False)``)
+        only re-schedules them.  The serial side equals the sum of the
+        parts' tallied cycles; the overlapped side is the step's actual
+        latency once chunk rounds interleave with decode rounds.
+        """
+        chunks = tuple((int(r), int(t)) for r, t in chunks)
+        decode_contexts = tuple(int(t) for t in decode_contexts)
+        if decode_m == 0:
+            decode_m = len(decode_contexts)
+        if not chunks:
+            return (self.step_pipeline(decode_m, decode_contexts)
+                    if decode_m else (0, 0))
+        key = (chunks, decode_m, decode_contexts, self.attention)
+        cached = self._mixed_cache.get(key)
+        if cached is None:
+            for rows, t in chunks:           # populate the round caches
+                self.step_tally(rows, (t,))
+            if decode_m:
+                self.step_tally(decode_m, decode_contexts)
+            if self.attention:
+                program = lower_serve_mixed(
+                    self.ops, chunks=chunks,
+                    decode_contexts=decode_contexts if decode_m else (),
+                    heads=self.heads, kv_heads=self.kv_heads,
+                    head_dim=self.head_dim, layers=self.layers,
+                    seed=self.seed, operands=False,
+                )
+            else:
+                parts = [lower_serve_step(self.ops, m=rows, seed=self.seed,
+                                          operands=False)
+                         for rows, _t in chunks]
+                tags = [f"{{p{i}}}" for i in range(len(parts))]
+                if decode_m:
+                    parts.append(lower_serve_step(
+                        self.ops, m=decode_m, seed=self.seed,
+                        operands=False))
+                    tags.append("{d}")
+                program = Program.merge(parts, tags=tags)
+                program.validate()
+            rounds = merge_round_criticals(
+                {st.name: self._rounds[
+                    (st.workload.stage, st.workload.m, st.workload.k,
+                     st.workload.n, st.workload.count)]}
+                for st in program
+            )
+            pp = compute_pipeline(program, rounds)
+            if not pp.ok:
+                raise AssertionError(
+                    f"mixed-step pipeline broke overlapped <= serial: {pp}"
+                )
+            cached = (pp.serial_cycles * self.layers,
+                      pp.overlapped_cycles * self.layers)
+            self._mixed_cache[key] = cached
+        return cached
+
+    def step_program_mixed(
+        self, chunks: Sequence[Tuple[int, int]],
+        decode_contexts: Sequence[int] = (),
+    ) -> Program:
+        """The *executable* merged mixed-phase Program (operands
+        synthesized) — what a :class:`~repro.legion.machine
+        .PipelinedExecutor` runs and a TimelineTracer measures; its
+        skeleton twin is what :meth:`step_pipeline_mixed` schedules."""
+        return lower_serve_mixed(
+            self.ops, chunks=tuple(chunks),
+            decode_contexts=tuple(decode_contexts), heads=self.heads,
+            kv_heads=self.kv_heads, head_dim=self.head_dim,
+            layers=self.layers, seed=self.seed,
+        )
+
+    def mixed_step_tally(
+        self, chunks: Sequence[Tuple[int, int]],
+        decode_contexts: Sequence[int] = (),
+    ) -> StepTally:
+        """Measured totals of one mixed step: the part tallies merged —
+        byte/cycle identical to executing the merged graph itself."""
+        tally = StepTally(m=0)
+        for rows, t in chunks:
+            tally.merge(self.step_tally(rows, self._ctx((t,))))
+        decode_contexts = tuple(decode_contexts)
+        if decode_contexts:
+            tally.merge(self.step_tally(len(decode_contexts),
+                                        self._ctx(decode_contexts)))
+        return tally
+
+    def mixed_workloads(
+        self, chunks: Sequence[Tuple[int, int]],
+        decode_contexts: Sequence[int] = (),
+    ) -> List[GEMMWorkload]:
+        """Analytic workload list of one mixed step (chunk parts then the
+        decode part) — what :meth:`cross_validate_mixed` simulates."""
+        out: List[GEMMWorkload] = []
+        for rows, t in chunks:
+            out.extend(self.workloads(rows, (t,)))
+        decode_contexts = tuple(decode_contexts)
+        if decode_contexts:
+            out.extend(self.workloads(len(decode_contexts),
+                                      decode_contexts))
+        return out
+
+    def cross_validate_mixed(
+        self, chunks: Sequence[Tuple[int, int]],
+        decode_contexts: Sequence[int] = (), *, rtol: float = 0.05,
+    ) -> Tuple[List[StageValidation], List[CycleValidation]]:
+        """:meth:`cross_validate` for a mixed prefill+decode step graph:
+        measured per-stage tallies of the merged step vs ``simulate()``
+        on the same concatenated workload list (``simulate`` aggregates
+        by stage family, so both sides sum chunk and decode parts)."""
+        chunks = tuple((int(r), int(t)) for r, t in chunks)
+        tally = self.mixed_step_tally(chunks, decode_contexts)
+        report = simulate(self.cfg,
+                          self.mixed_workloads(chunks, decode_contexts))
+        traffic_vals: List[StageValidation] = []
+        cycle_vals: List[CycleValidation] = []
+        for stage, st in tally.stages.items():
+            sim = report.stages[stage]
+            traffic_vals.append(StageValidation(
+                stage=stage, measured=st.traffic,
+                analytic=TrafficTotals(
+                    weight_bytes=sim.weight_bytes, act_bytes=sim.act_bytes,
+                    psum_bytes=sim.psum_bytes,
+                ),
+                rtol=rtol,
+            ))
+            cycle_vals.append(CycleValidation(
+                stage=stage, measured=st.cycles, analytic=sim.cycles,
+                rtol=rtol, analytic_breakdown=sim.cycle_breakdown,
+            ))
+        return traffic_vals, cycle_vals
+
     # ------------------------------------------------------------------ #
     def cross_validate(
         self, m: int = 1, *, contexts: Optional[Sequence[int]] = None,
@@ -663,18 +870,23 @@ class LegionServeBackend:
         decode_tokens = sum(r.decode_tokens for r in reqs)
         decode_cycles = (self._decode_cycles / self._decode_tokens
                          if self._decode_tokens else 0.0)
-        steps = self.decode_steps
+        # per-step numbers average over the engine-view steps (== decode
+        # steps in legacy mode; in-flight mixed steps count once each and
+        # carry prefill too); per-token numbers stay decode-only so the
+        # cache_budget rate never absorbs prefill cycles
+        steps = self.engine_steps
         serial_step = self._engine_serial_cycles / steps if steps else 0.0
         overlap_step = (self._engine_overlapped_cycles / steps
                         if steps else 0.0)
-        overlap_token = (self._engine_overlapped_cycles / self._decode_tokens
+        overlap_token = (self._decode_overlapped_cycles / self._decode_tokens
                          if self._decode_tokens else 0.0)
-        serial_token = (self._engine_serial_cycles / self._decode_tokens
+        serial_token = (self._decode_serial_cycles / self._decode_tokens
                         if self._decode_tokens else 0.0)
         return {
             "requests": len(self.per_request),
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
+            "engine_steps": self.engine_steps,
             "prefill_tokens": sum(r.prefill_tokens for r in reqs),
             "decode_tokens": decode_tokens,
             "weight_bytes": self.totals.weight_bytes,

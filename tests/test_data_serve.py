@@ -113,6 +113,136 @@ def test_prepare_params_quantizes_matrices():
     assert len(np.unique(per_layer)) <= 3
 
 
+def test_prompt_boundary_completions():
+    """EOS sampled at prefill and a 1-token budget both complete the
+    request AT admission — one output token, no decode slot occupied."""
+    cfg = reduced(get_config("smollm-360m"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    # discover the greedy prefill-sampled token for this prompt
+    probe = ServeEngine(api, params, max_slots=2, max_seq=64)
+    probe.submit(np.array([5, 6, 7]), max_new_tokens=4)
+    first = probe.run_until_done()[0].output[0]
+
+    eng = ServeEngine(api, params, max_slots=2, max_seq=64)
+    r_eos = eng.submit(np.array([5, 6, 7]), max_new_tokens=4, eos_id=first)
+    r_one = eng.submit(np.array([5, 6, 7]), max_new_tokens=1)
+    eng.step()
+    assert r_eos.done and r_eos.output == [first]
+    assert r_one.done and len(r_one.output) == 1     # not 2
+    assert not r_eos.truncated and not r_one.truncated
+    assert eng._active() == []                       # no slot ever taken
+    assert len(eng.finished) == 2
+
+
+def test_submit_validates_prompt_and_budget():
+    """Overlong prompts would silently clamp the cache write and decode a
+    corrupted lane — submit must reject them (and degenerate inputs)."""
+    cfg = reduced(get_config("smollm-360m"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_slots=2, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(np.arange(1, 18))                 # 17 tokens > 16
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.array([], np.int32))
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.array([[1, 2]]))               # 2-D
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(np.array([1, 2]), max_new_tokens=0)
+    assert eng.queue == []
+    # an exactly-window-sized prompt is legal (completes at its boundary)
+    edge = eng.submit(np.arange(1, 17), max_new_tokens=4)
+    eng.run_until_done()
+    assert edge.done and len(edge.output) == 1
+
+
+def test_window_truncation_flagged():
+    """Requests cut off by the cache window carry ``Request.truncated``;
+    natural (budget/EOS) completions do not."""
+    cfg = reduced(get_config("smollm-360m"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_slots=1, max_seq=8)
+    cut = eng.submit(np.arange(1, 5), max_new_tokens=32)   # 4 + 32 >> 8
+    nat = eng.submit(np.arange(1, 4), max_new_tokens=2)
+    eng.run_until_done()
+    assert cut.done and cut.truncated
+    assert len(cut.output) < cut.max_new_tokens
+    assert nat.done and not nat.truncated and len(nat.output) == 2
+    # prompt filling the whole window: truncated at the prefill boundary
+    window = ServeEngine(api, params, max_slots=1, max_seq=8)
+    edge = window.submit(np.arange(1, 9), max_new_tokens=4)
+    window.run_until_done()
+    assert edge.done and edge.truncated and len(edge.output) == 1
+    # ... unless one token was all it wanted anyway
+    happy = ServeEngine(api, params, max_slots=1, max_seq=8)
+    one = happy.submit(np.arange(1, 9), max_new_tokens=1)
+    happy.run_until_done()
+    assert one.done and not one.truncated
+
+
+def test_prefill_chunk_bit_exact():
+    """Chunked prefill == whole-prompt prefill, bit for bit: final logits,
+    every cache leaf, and the decode continuation."""
+    cfg = reduced(get_config("qwen3-1.7b")).replace(dtype="float32",
+                                                    quantization="none")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    prompt = np.arange(1, 13, dtype=np.int32)[None]   # 12 tokens
+
+    whole_cache = api.init_cache(1, 32)
+    lg_whole, whole_cache = api.prefill(
+        params, {"tokens": jnp.asarray(prompt)}, whole_cache)
+
+    cache = api.init_cache(1, 32)
+    pos0 = 0
+    for c in (5, 4, 3):                               # uneven chunks
+        lg, cache = api.prefill_chunk(
+            params, jnp.asarray(prompt[:, pos0:pos0 + c]), cache, pos0)
+        pos0 += c
+    assert jnp.array_equal(lg[:, -1], lg_whole[:, -1])
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(whole_cache)):
+        assert jnp.array_equal(a, b)
+    # decode continues identically from either cache
+    tok = jnp.argmax(lg_whole[:, -1], axis=-1).astype(jnp.int32)
+    lg_a, _ = api.decode(params, tok, whole_cache, jnp.int32(12))
+    lg_b, _ = api.decode(params, tok, cache, jnp.int32(12))
+    assert jnp.array_equal(lg_a, lg_b)
+
+
+def test_inflight_engine_matches_legacy_bit_exact():
+    """Tentpole acceptance: the in-flight engine (chunked prefill merged
+    with decode) emits exactly the tokens the legacy engine does."""
+    cfg = reduced(get_config("smollm-360m"))
+    api = build_model(cfg)
+    params = prepare_params(api.init(jax.random.PRNGKey(0)))
+    prompts = [np.arange(1, 4 + 3 * i) for i in range(5)]   # 3..15 tokens
+    outs = []
+    for chunk in (None, 4):
+        eng = ServeEngine(api, params, max_slots=3, max_seq=64,
+                          prefill_chunk_tokens=chunk)
+        reqs = [eng.submit(p, max_new_tokens=4 + i % 3)
+                for i, p in enumerate(prompts)]
+        done = eng.run_until_done()
+        assert len(done) == 5
+        outs.append([r.output for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_inflight_requires_chunked_prefill_support():
+    cfg = reduced(get_config("mamba2-130m"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(api, params, prefill_chunk_tokens=8)
+    cfg2 = reduced(get_config("smollm-360m"))
+    api2 = build_model(cfg2)
+    with pytest.raises(ValueError, match=">= 1"):
+        ServeEngine(api2, api2.init(jax.random.PRNGKey(0)),
+                    prefill_chunk_tokens=0)
+
+
 def test_kv_cache_plan():
     cfg = get_config("granite-20b")
     bpt = kv_bytes_per_token(cfg)

@@ -259,6 +259,37 @@ def test_two_layer_serve_program_trace_parity(served):
     assert {e["name"] for e in names} == {"process_name", "thread_name"}
 
 
+def test_mixed_step_program_trace_parity(served):
+    """In-flight tentpole: a merged prefill-chunk + decode Program keeps
+    exact serial/overlapped tracer parity with the run's PipelineReport —
+    mixed-phase steps are priced by the same machinery as pure decode."""
+    cfg, api, params = served
+    backend = LegionServeBackend(ACCEL := dlegion(), cfg, params)
+    prog = backend.step_program_mixed([(6, 6), (4, 10)], (8, 12))
+
+    tracer = TimelineTracer(ACCEL)
+    machine = Machine(ACCEL, backend=PipelinedExecutor(),
+                      instruments=[tracer])
+    rep = machine.run(prog, validate=False)
+    assert rep.pipeline is not None and rep.pipeline.ok
+
+    assert tracer.serial_cycles() == rep.pipeline.serial_cycles
+    assert tracer.overlapped_cycles() == rep.pipeline.overlapped_cycles
+    assert rep.pipeline.overlapped_cycles < rep.pipeline.serial_cycles
+    tl = tracer.programs[-1]
+    ser, ov = tl.serial_schedule(), tl.overlapped_schedule()
+    key = lambda sl: (sl.stage, sl.round_, sl.legion, sl.duration)
+    assert sorted(map(key, ser.slices)) == sorted(map(key, ov.slices))
+    assert ov.makespan == ser.makespan - rep.pipeline.hidden_cycles
+    # the scheduler's skeleton twin prices the same step identically
+    # (scaled to all model layers, like every engine-view number)
+    serial, overlapped = backend.step_pipeline_mixed(
+        [(6, 6), (4, 10)], decode_contexts=(8, 12))
+    assert (serial, overlapped) == \
+        (rep.pipeline.serial_cycles * cfg.layers,
+         rep.pipeline.overlapped_cycles * cfg.layers)
+
+
 def test_chain_program_overlapped_equals_serial():
     """A pure dependency chain leaves nothing to overlap: both placements
     must agree (and with the PipelineReport's own degenerate case)."""
@@ -468,6 +499,49 @@ def test_run_load_bounded_queue_rejects(served):
             assert rec.ttft is None and rec.cycles_per_token is None
     # rejected requests never reached the engine
     assert len(eng.finished) == s["completed"]
+
+
+def test_run_load_inflight_engine(served):
+    """The load harness prices in-flight engines off merged ``step``
+    events (one overlapped clock advance per engine step, TTFT at the
+    prompt-completing chunk) and drains every request."""
+    cfg, api, params = served
+    reg = MetricsRegistry()
+    eng = ServeEngine(api, params, max_slots=4, max_seq=64,
+                      prefill_chunk_tokens=8)
+    backend = LegionServeBackend(dlegion(), cfg, params)
+    backend.attach(eng)
+    trace = poisson_trace(12, mean_interarrival_cycles=5000.0, seed=1)
+    report = run_load(eng, backend, trace, metrics=reg)
+    s = report.summary()
+    assert s["requests"] == s["completed"] == 12
+    assert s["truncated"] == s["refused"] == 0
+    assert s["goodput"] == 12
+    assert 0 < s["p50_ttft_cycles"] <= s["p99_ttft_cycles"]
+    for rec in report.completed():
+        assert rec.arrival < rec.first_token <= rec.finish
+    # every clock advance is a merged step, no legacy events
+    assert all(e["phase"] == "step" for e in report.occupancy)
+    assert reg.histogram("load_ttft_cycles").count() == 12
+    assert reg.histogram("load_step_cycles").count() == len(report.occupancy)
+
+
+def test_run_load_reports_truncations(served):
+    """Window-truncated completions surface in the summary (and are
+    excluded from goodput) — distinguishable from natural finishes."""
+    cfg, api, params = served
+    eng = ServeEngine(api, params, max_slots=2, max_seq=16)
+    backend = LegionServeBackend(dlegion(), cfg, params)
+    backend.attach(eng)
+    trace = poisson_trace(6, mean_interarrival_cycles=2000.0, seed=2,
+                          prompt_lens=(12,), output_lens=(8,))
+    report = run_load(eng, backend, trace)
+    s = report.summary()
+    assert s["completed"] == 6
+    assert s["truncated"] == 6            # 12 + 8 never fits max_seq=16
+    assert s["goodput"] == 0
+    for rec in report.completed():
+        assert rec.truncated and not rec.refused
 
 
 # --------------------------------------------------------------------------- #

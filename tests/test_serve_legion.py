@@ -352,6 +352,125 @@ def test_pipelined_executor_serve_step(served):
     assert rep.pipeline.overlapped_cycles <= rep.pipeline.serial_cycles
 
 
+def test_mixed_step_cross_validates(served):
+    """Tentpole: a merged prefill-chunk + decode step graph — measured
+    per-stage traffic and cycles vs simulate() on the concatenated
+    workload list, all six families within tolerance."""
+    cfg, _api, params = served
+    backend = LegionServeBackend(ACCEL, cfg, params)
+    traffic_vals, cycle_vals = backend.cross_validate_mixed(
+        [(8, 8), (4, 12)], (5, 9, 13), rtol=0.05)
+    assert len(traffic_vals) == len(cycle_vals) == 6
+    for v in traffic_vals + cycle_vals:
+        assert v.ok, str(v)
+    for v in cycle_vals:
+        assert v.measured > 0
+
+
+def test_mixed_pipeline_serial_matches_parts(served):
+    """step_pipeline_mixed: the serial side equals the summed part
+    tallies exactly; the overlapped side is a real (<=) pipelined
+    latency; degenerate shapes delegate to the pure-decode path."""
+    cfg, _api, params = served
+    backend = LegionServeBackend(ACCEL, cfg, params)
+    chunks, dctx = ((8, 8), (4, 12)), (5, 9, 13)
+    serial, overlapped = backend.step_pipeline_mixed(
+        chunks, decode_contexts=dctx)
+    assert serial == backend.mixed_step_tally(chunks, dctx).cycles
+    assert 0 < overlapped <= serial
+    # a mixed step beats running the phases back to back: the merged
+    # graph overlaps chunk rounds with decode rounds
+    _, chunk_only = backend.step_pipeline_mixed(chunks)
+    _, decode_only = backend.step_pipeline(len(dctx), dctx)
+    assert overlapped < chunk_only + decode_only
+    # no chunks -> exactly the decode-only engine view
+    assert backend.step_pipeline_mixed((), decode_contexts=dctx) == \
+        backend.step_pipeline(len(dctx), dctx)
+    assert backend.step_pipeline_mixed(()) == (0, 0)
+    # cached: the same shapes never rebuild the merged skeleton
+    key = (chunks, len(dctx), dctx, True)
+    assert backend._mixed_cache[key] == (serial, overlapped)
+    # projection-only backends schedule mixed steps too
+    proj = LegionServeBackend(ACCEL, cfg, params, attention=False)
+    s_p, o_p = proj.step_pipeline_mixed(chunks, decode_contexts=dctx)
+    assert s_p == proj.mixed_step_tally(chunks, dctx).cycles
+    assert 0 < o_p <= s_p
+
+
+def test_inflight_engine_backend_accounting(served):
+    """An in-flight engine drives the backend through merged ``step``
+    events: prefill chunks and decode land in the same tallies the
+    legacy path produces, and the engine view covers the merged steps."""
+    cfg, api, params = served
+    eng = ServeEngine(api, params, max_slots=2, max_seq=64,
+                      prefill_chunk_tokens=6)
+    backend = LegionServeBackend(ACCEL, cfg, params).attach(eng)
+    events = []
+    eng.step_observers.append(events.append)
+    rng = np.random.default_rng(5)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab, size=8),
+                       max_new_tokens=4) for _ in range(3)]
+    done = eng.run_until_done()
+    assert len(done) == 3
+
+    assert set(backend.per_request) == {r.uid for r in reqs}
+    for r in done:
+        tally = backend.per_request[r.uid]
+        assert tally.prefill_tokens == len(r.prompt)
+        assert tally.decode_tokens == len(r.output) - 1
+    # ONE merged event per engine step, and the engine view counts each
+    # mixed step once — prefill chunks included
+    assert all(e["kind"] == "step" for e in events)
+    assert backend.engine_steps == len(events)
+    assert any(e["chunks"] and e["uids"] for e in events)   # truly mixed
+    s = backend.summary()
+    assert s["engine_steps"] == backend.engine_steps > 0
+    assert 0 < s["overlapped_cycles_per_step"] <= \
+        s["serial_cycles_per_step"]
+    # the per-token decode rate stays decode-only (cache_budget's input)
+    assert 0 < s["overlapped_cycles_per_decode_token"] <= \
+        s["serial_cycles_per_decode_token"]
+    budget = backend.cache_budget(batch=2, max_seq=64,
+                                  hbm_bytes_per_chip=16e9, chips=1)
+    assert budget.tokens_per_sec == pytest.approx(
+        ACCEL.freq_hz / s["overlapped_cycles_per_decode_token"])
+
+
+def test_live_admission_gates_intake(served):
+    """LiveAdmission refuses requests that can never fit the KV budget,
+    defers under pressure, and always admits on an idle engine."""
+    from repro.serve import LiveAdmission
+    from repro.serve.kv_cache import kv_bytes_per_token
+
+    cfg, api, params = served
+    bpt = kv_bytes_per_token(cfg)
+    # capacity for 15 KV rows: a 6+4 request (10 rows) fits alone; two
+    # concurrently (20 rows) exceed it, so the second defers
+    policy_capacity = 15 * bpt
+    backend = LegionServeBackend(ACCEL, cfg, params)
+    policy = LiveAdmission(backend, hbm_bytes_per_chip=policy_capacity)
+    eng = ServeEngine(api, params, max_slots=4, max_seq=64,
+                      admission=policy)
+    backend.attach(eng)
+
+    big = eng.submit(np.arange(1, 30), max_new_tokens=8)   # 37 rows: never
+    a = eng.submit(np.arange(1, 7), max_new_tokens=4)      # 10 rows
+    b = eng.submit(np.arange(1, 7), max_new_tokens=4)      # 10 rows: defers
+    done = eng.run_until_done()
+
+    assert big.refused and big.done and big.output == []
+    assert big in eng.refused and big not in done
+    assert a.done and b.done and not a.refused and not b.refused
+    assert len(done) == 2
+    assert policy.stats.refused == 1
+    assert policy.stats.deferred_kv >= 1          # b waited for a to drain
+    assert policy.stats.admitted >= 2
+    phases = [e["phase"] for e in eng.step_log]
+    assert "refuse" in phases and "defer" in phases
+    # idle-engine progress guarantee: b was admitted once a finished
+    assert len(b.output) == b.max_new_tokens
+
+
 def test_step_tally_scales_with_model_layers(served):
     cfg, _api, params = served
     backend = LegionServeBackend(ACCEL, cfg, params)
