@@ -12,11 +12,13 @@ Direction is inferred from the key name (benchmarks/README.md schema):
 * **higher is better** — ``overlap_x``, ``*speedup*``, ``*tokens_per_sec``,
   ``*_x`` ratios: a drop below ``old * (1 - rtol)`` is a regression;
 * **lower is better** — ``*_err`` fractions, ``*cycles*`` / ``*bytes*``
-  totals, ``p50_*`` / ``p99_*`` latencies, ``us_per_call``: a rise above
+  totals (page-fetch bytes included), ``*waste_frac`` shares
+  (page-boundary padding), ``p50_*`` / ``p99_*`` latencies,
+  ``us_per_call``: a rise above
   ``old * (1 + rtol)`` is a regression (``us_per_call`` is *reported* but
   never gated — host wall-clock is too noisy across runners);
-* anything else (counts, labels, booleans) is compared for information
-  only.
+* anything else (counts, labels, booleans) — ``preempted`` explicitly
+  among them — is compared for information only.
 
 Rows or modules present on one side only are reported as notes, never
 failures — benchmarks come and go as the repo grows, and a first run has
@@ -36,15 +38,24 @@ ATOL = 1e-9                 # absolute slack so old == 0.0 never divides/trips
 # keys reported but never gated: host wall-clock noise, not model output
 UNGATED_KEYS = frozenset({"us_per_call"})
 
-HIGHER_BETTER_EXACT = frozenset({"overlap_x"})
+HIGHER_BETTER_EXACT = frozenset({"overlap_x", "goodput"})
 HIGHER_BETTER_SUFFIX = ("speedup", "tokens_per_sec", "_x")
-LOWER_BETTER_SUFFIX = ("_err", "_mb", "_kb", "_gb")
+# "waste_frac" covers page_waste_frac: last-page padding's share of page
+# traffic must not rise (and "bytes" already covers page_fetch_bytes);
+# other *_frac keys (skip_frac, attn_cycle_frac) stay informational —
+# their direction is not "lower is better".
+LOWER_BETTER_SUFFIX = ("_err", "_mb", "_kb", "_gb", "waste_frac")
 LOWER_BETTER_SUBSTR = ("cycles", "bytes")
 LOWER_BETTER_PREFIX = ("p50_", "p99_", "us_per")
+# Deltas reported but never regressions: preemption counts shift with any
+# intended scheduling change — a note for the reviewer, not a CI failure.
+INFO_KEYS = frozenset({"preempted"})
 
 
 def direction(key: str) -> int:
     """+1 if higher is better, -1 if lower is better, 0 if ungated."""
+    if key in INFO_KEYS:
+        return 0
     if key in HIGHER_BETTER_EXACT or key.endswith(HIGHER_BETTER_SUFFIX):
         return +1
     if (key.endswith(LOWER_BETTER_SUFFIX)

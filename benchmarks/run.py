@@ -29,6 +29,10 @@ from typing import Dict, List, Optional, Tuple
 
 MAX_ERR_FRACTION = 0.05     # cross-validation gate: measured vs simulate()
 MIN_OVERLAP_X = 1.0         # pipeline gate: overlapped must never exceed serial
+# Paged-KV gate: the allocator guarantees < one page of padding per active
+# request, so padding can never reach the whole page pool — a waste
+# fraction at or above 1.0 means the page accounting itself broke.
+MAX_WASTE_FRAC = 1.0
 
 
 def _jsonable(obj):
@@ -55,8 +59,10 @@ def _diff_friendly(obj):
 
 def gate_failures(rows: List[dict]) -> List[str]:
     """Trajectory gates over emitted derived values (benchmarks/README.md):
-    ``*_err`` keys are error fractions (<= 5%), ``overlap_x`` keys are
-    serial/overlapped cycle ratios (>= 1.0)."""
+    ``*_err`` keys are error fractions (<= 5%; ``page_xval_err`` from the
+    paged serve rows rides this), ``overlap_x`` keys are serial/overlapped
+    cycle ratios (>= 1.0), and ``*waste_frac`` page-padding shares must
+    stay under 1.0."""
     bad = []
     for row in rows:
         for key, val in row.get("derived", {}).items():
@@ -68,6 +74,9 @@ def gate_failures(rows: List[dict]) -> List[str]:
             if key == "overlap_x" and val < MIN_OVERLAP_X:
                 bad.append(f"{row['name']}: {key}={val:.4f} < "
                            f"{MIN_OVERLAP_X} (overlapped > serial)")
+            if key.endswith("waste_frac") and val >= MAX_WASTE_FRAC:
+                bad.append(f"{row['name']}: {key}={val:.4f} >= "
+                           f"{MAX_WASTE_FRAC} (page accounting broke)")
     return bad
 
 
@@ -84,7 +93,8 @@ def write_json(json_dir: str, module: str, ok: bool, error: Optional[str],
                 "ok": ok,
                 "error": error,
                 "gates": {"max_err_fraction": MAX_ERR_FRACTION,
-                          "min_overlap_x": MIN_OVERLAP_X},
+                          "min_overlap_x": MIN_OVERLAP_X,
+                          "max_waste_frac": MAX_WASTE_FRAC},
                 "rows": rows,
             }),
             fh, indent=2, sort_keys=True, default=_jsonable,

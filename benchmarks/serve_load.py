@@ -18,6 +18,16 @@ would see:
 * ``overlap_x`` — the backend's whole-run pipelining speedup (rides the
   run.py >= 1.0 trajectory gate).
 
+The ``lognormal_120_paged`` / ``lognormal_120_paged_tight`` pair replays
+one heavy-tailed (lognormal) trace through the PAGED KV engine
+(``ServeEngine(paged_kv=...)`` + ``LegionServeBackend(page_tokens=...)``):
+the first with a pool covering every slot's window (isolating page-fetch
+traffic and last-page padding, with ``page_xval_err`` cross-validating
+the page channel against ``simulate()``), the second with the pool
+tightened to ONE max-length window — every request must still complete,
+``preempted`` must be nonzero (eviction + re-prefill really ran), and
+``goodput`` grades completions against a TTFT/per-token SLO.
+
 The ``poisson_200_inflight`` row replays the SAME Poisson trace with
 in-flight batching on (``prefill_chunk_tokens=`` chunked prefill merged
 with the decode batch into one Program per step) and ``LiveAdmission``
@@ -39,39 +49,48 @@ from benchmarks.common import emit
 from repro.core import dlegion
 
 POISSON_REQUESTS = 200
+LOGNORMAL_REQUESTS = 120
 BURST_REQUESTS = 60
 MAX_SLOTS = 4
 MAX_SEQ = 64
 
 
-def _fresh(metrics=None, *, prefill_chunk_tokens=None, live_admission=False):
+def _fresh(metrics=None, *, prefill_chunk_tokens=None, live_admission=False,
+           page_tokens=None, total_pages=None):
     import jax
 
     from repro.configs import get_config, reduced
     from repro.models import build_model
-    from repro.serve import LegionServeBackend, LiveAdmission, ServeEngine
+    from repro.serve import (
+        LegionServeBackend, LiveAdmission, PagedKVCache, ServeEngine,
+    )
     from repro.serve.engine import prepare_params
 
     cfg = reduced(get_config("bitnet-1.58b"))
     api = build_model(cfg)
     params = prepare_params(api.init(jax.random.PRNGKey(0)))
-    backend = LegionServeBackend(dlegion(), cfg, params)
+    backend = LegionServeBackend(dlegion(), cfg, params,
+                                 page_tokens=page_tokens or 0)
     # a generous budget: the policy runs (and is exercised every step)
     # without throttling this trace — deferrals/refusals would show up in
     # the emitted row if the KV math ever regressed
     admission = LiveAdmission(backend, hbm_bytes_per_chip=8 << 30) \
         if live_admission else None
+    paged = (PagedKVCache(total_pages=total_pages,
+                          page_tokens=page_tokens)
+             if page_tokens is not None else None)
     eng = ServeEngine(api, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
                       metrics=metrics,
                       prefill_chunk_tokens=prefill_chunk_tokens,
-                      admission=admission)
+                      admission=admission, paged_kv=paged)
     backend.attach(eng)
     return eng, backend
 
 
 def run():
     from repro.obs import (
-        MetricsRegistry, bursty_trace, poisson_trace, run_load,
+        SLO, MetricsRegistry, bursty_trace, lognormal_trace, poisson_trace,
+        run_load,
     )
 
     rows = []
@@ -149,6 +168,85 @@ def run():
         "mean_occupancy": si["mean_occupancy"],
         "peak_occupancy": si["peak_occupancy"],
         "overlap_x": backend.summary()["pipeline_speedup"],
+    }))
+
+    # ------- heavy-tailed trace through the PAGED engine, roomy pool ----- #
+    # Lognormal arrivals/lengths (the production shape) through a paged-KV
+    # engine whose pool covers every slot's full window: no preemption is
+    # possible, so this row isolates the page-granularity costs — whole-
+    # page fetch traffic, last-page padding share — and cross-validates
+    # the page channel against simulate() (page_xval_err rides the run.py
+    # *_err gate).  Goodput is graded against a TTFT + per-token SLO.
+    PAGE_TOKENS = 8
+    pages_per_slot = -(-MAX_SEQ // PAGE_TOKENS)
+    slo = SLO(ttft_cycles=40.0 * step_cycles,
+              per_token_cycles=4.0 * step_cycles)
+    eng, backend = _fresh(page_tokens=PAGE_TOKENS,
+                          total_pages=MAX_SLOTS * pages_per_slot)
+    tail = lognormal_trace(LOGNORMAL_REQUESTS,
+                           mean_interarrival_cycles=1.25 * step_cycles,
+                           max_prompt=16, quantum=4, seed=2)
+    t0 = time.perf_counter()
+    report = run_load(eng, backend, tail, slo=slo)
+    us = (time.perf_counter() - t0) * 1e6 / LOGNORMAL_REQUESTS
+    s = report.summary()
+    assert s["completed"] == LOGNORMAL_REQUESTS, s
+    assert s["preempted"] == 0, s         # pool covers every slot's window
+    assert 0 < s["goodput"] <= s["completed"], s
+    bsum = backend.summary()
+    assert bsum["page_fetch_bytes"] > 0   # pages really were priced
+    assert 0 <= bsum["page_waste_frac"] < 1
+    tvals, cvals = backend.cross_validate(m=1, contexts=(MAX_SEQ,))
+    xval = max([e for v in tvals for e in v.errors.values()]
+               + [v.rel_err for v in cvals])
+    rows.append(emit("serve_load/lognormal_120_paged", us, {
+        "requests": s["requests"],
+        "completed": s["completed"],
+        "goodput": s["goodput"],
+        "preempted": s["preempted"],
+        "deferred": s["deferred"],
+        "p50_ttft_kcycles": s["p50_ttft_cycles"] / 1e3,
+        "p99_ttft_kcycles": s["p99_ttft_cycles"] / 1e3,
+        "p99_tok_kcycles": s["p99_tok_cycles"] / 1e3,
+        "page_fetch_bytes": bsum["page_fetch_bytes"],
+        "page_waste_frac": bsum["page_waste_frac"],
+        "page_xval_err": xval,
+        "overlap_x": bsum["pipeline_speedup"],
+    }))
+
+    # ------- the SAME tail, page pool tightened to one window ------------ #
+    # The HBM pool now holds exactly ONE max-length request's pages: slots
+    # only run concurrently while their page demand fits, and pressure is
+    # resolved by evicting the latest-admitted slot (pages freed, request
+    # re-queued for re-prefill).  The acceptance gate: every request still
+    # completes, preemptions actually happened, and goodput (same SLO)
+    # reports what the shrunken pool really delivered.
+    eng, backend = _fresh(page_tokens=PAGE_TOKENS,
+                          total_pages=pages_per_slot)
+    t0 = time.perf_counter()
+    tight = run_load(eng, backend, tail, slo=slo)
+    us = (time.perf_counter() - t0) * 1e6 / LOGNORMAL_REQUESTS
+    st = tight.summary()
+    assert st["completed"] == LOGNORMAL_REQUESTS, st
+    assert st["preempted"] > 0, st        # the tight pool must evict
+    assert 0 <= st["goodput"] <= st["completed"], st
+    bsum = backend.summary()
+    tvals, cvals = backend.cross_validate(m=1, contexts=(MAX_SEQ,))
+    xval = max([e for v in tvals for e in v.errors.values()]
+               + [v.rel_err for v in cvals])
+    rows.append(emit("serve_load/lognormal_120_paged_tight", us, {
+        "requests": st["requests"],
+        "completed": st["completed"],
+        "goodput": st["goodput"],
+        "preempted": st["preempted"],
+        "deferred": st["deferred"],
+        "p50_ttft_kcycles": st["p50_ttft_cycles"] / 1e3,
+        "p99_ttft_kcycles": st["p99_ttft_cycles"] / 1e3,
+        "p99_tok_kcycles": st["p99_tok_cycles"] / 1e3,
+        "page_fetch_bytes": bsum["page_fetch_bytes"],
+        "page_waste_frac": bsum["page_waste_frac"],
+        "page_xval_err": xval,
+        "overlap_x": bsum["pipeline_speedup"],
     }))
 
     # ---------------- bursty trace against a bounded queue --------------- #

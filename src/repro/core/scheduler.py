@@ -55,6 +55,11 @@ class StagePlan:
     assignments: List[Assignment]
     rounds: int
     weight_bits: int = 8     # stationary-operand precision (mode selection)
+    # Paged-KV geometry copied from the workload (see GEMMWorkload): the
+    # stationary operand is block-allocated in page_tokens-token pages
+    # along page_axis; 0 / "" = contiguous.
+    page_tokens: int = 0
+    page_axis: str = ""
 
     def legions_used(self) -> int:
         return len({a.legion for a in self.assignments})
@@ -108,7 +113,8 @@ def plan_stage(
                 ))
     return StagePlan(stage=stage or w.stage, mapping=w.mapping,
                      assignments=assignments, rounds=rounds,
-                     weight_bits=w.weight_bits)
+                     weight_bits=w.weight_bits,
+                     page_tokens=w.page_tokens, page_axis=w.page_axis)
 
 
 def plan_model(

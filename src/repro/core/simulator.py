@@ -44,6 +44,13 @@ class StageResult:
     weight_bytes: float = 0.0
     act_bytes: float = 0.0
     psum_bytes: float = 0.0
+    # Paged-KV accounting (zero unless the workload carries page_tokens):
+    # distinct page fetches, whole-page bytes, and the last-page padding.
+    # The waste is ALSO folded into ``weight_bytes`` — a page fetch moves
+    # padding a contiguous layout never would.
+    page_fetches: float = 0.0
+    page_bytes: float = 0.0
+    page_waste_bytes: float = 0.0
     # Cycle decomposition (sums to ``cycles``): activation rows streaming
     # through the array, systolic fill per tile pass, ADiP pipeline stages,
     # and the output drain per (unit, round) — comparable component-wise to
@@ -176,6 +183,22 @@ def _simulate_workload(
         k_pad * n_pad_total * wbytes * distinct * w.layers * kt_keep
     )
 
+    # ---- paged-KV traffic (block-allocated stationary operand) ----------- #
+    # The KV matrix is fetched in whole page_tokens-token pages along the
+    # token axis; the last page carries padding tokens the contiguous
+    # layout never moves.  Per-token footprint is the *unpadded* non-token
+    # dimension (K elems per K^T column for attn_score, N elems per V row
+    # for attn_output) — identical to the runtime's per-page accounting, so
+    # cross-validation stays exact.  Paged stages are 8-bit (no kt_keep —
+    # ZTB only applies to sub-8-bit weights, and pages are fetched whole).
+    if w.page_tokens:
+        per_tok = w.k if w.page_axis == "n" else w.n
+        page_unit = per_tok * wbytes * distinct * w.layers
+        res.page_fetches = w.page_count * distinct * w.layers
+        res.page_bytes = w.page_count * w.page_tokens * page_unit
+        res.page_waste_bytes = w.page_waste_tokens * page_unit
+        res.weight_bytes += res.page_waste_bytes
+
     # ---- streamed (activation) traffic ----------------------------------- #
     # The input matrix re-streams once per N-tile pass; NoC multicast shares
     # one stream across Legions (SS IV-B "input broadcast", "8x reuse").
@@ -229,6 +252,9 @@ def simulate(
         agg.weight_bytes += r.weight_bytes
         agg.act_bytes += r.act_bytes
         agg.psum_bytes += r.psum_bytes
+        agg.page_fetches += r.page_fetches
+        agg.page_bytes += r.page_bytes
+        agg.page_waste_bytes += r.page_waste_bytes
         agg.stream_cycles += r.stream_cycles
         agg.fill_cycles += r.fill_cycles
         agg.pipeline_cycles += r.pipeline_cycles

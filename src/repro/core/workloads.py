@@ -55,6 +55,46 @@ class GEMMWorkload:
     kv_group: int = 1            # stationary matrix shared by kv_group heads
     mapping: str = HEAD_PER_UNIT
     layers: int = 1              # replicate per model layer
+    # Paged-KV annotations: the stationary operand is a KV-cache matrix
+    # block-allocated in fixed ``page_tokens``-token pages along
+    # ``page_axis`` ("n" for attn_score's [hd, t] K^T, "k" for
+    # attn_output's [t, hd] V).  0 / "" = contiguous (no page modeling).
+    page_tokens: int = 0
+    page_axis: str = ""
+
+    def __post_init__(self):
+        if self.page_tokens < 0:
+            raise ValueError(f"page_tokens must be >= 0, got "
+                             f"{self.page_tokens}")
+        if bool(self.page_tokens) != bool(self.page_axis):
+            raise ValueError(
+                f"page_tokens={self.page_tokens} and page_axis="
+                f"{self.page_axis!r} must be set together"
+            )
+        if self.page_axis not in ("", "n", "k"):
+            raise ValueError(f"page_axis must be 'n' or 'k', got "
+                             f"{self.page_axis!r}")
+
+    @property
+    def page_token_count(self) -> int:
+        """Logical tokens along the paged axis (0 when un-paged)."""
+        if not self.page_tokens:
+            return 0
+        return self.n if self.page_axis == "n" else self.k
+
+    @property
+    def page_count(self) -> int:
+        """Pages covering the token axis: ceil(tokens / page_tokens)."""
+        if not self.page_tokens:
+            return 0
+        return -(-self.page_token_count // self.page_tokens)
+
+    @property
+    def page_waste_tokens(self) -> int:
+        """Last-page padding: allocated minus logical tokens."""
+        if not self.page_tokens:
+            return 0
+        return self.page_count * self.page_tokens - self.page_token_count
 
     @property
     def macs(self) -> int:
@@ -141,7 +181,7 @@ def attention_workloads(spec: AttentionSpec) -> List[GEMMWorkload]:
 
 def decode_attention_workloads(
     *, heads: int, kv_heads: int, head_dim: int, context: int, m: int = 1,
-    layers: int = 1,
+    layers: int = 1, page_tokens: int = 0,
 ) -> List[GEMMWorkload]:
     """The act-to-act stages of ONE serving step at a KV context length.
 
@@ -150,6 +190,12 @@ def decode_attention_workloads(
     score GEMM is ``[m, hd] @ [hd, t]`` and the output GEMM ``[m, t] @
     [t, hd]`` — the KV-cache matrices are the stationary operands, shared
     across each GQA group (multicast reuse factor ``heads / kv_heads``).
+
+    With ``page_tokens > 0`` the stationary KV operands are annotated as
+    block-allocated pages along the token axis (score: N, output: K) —
+    the runtime then fires per-page fetch events and both it and the
+    analytic model account the last page's padding as extra stationary
+    traffic (page-boundary waste).
     """
     if context < 1:
         raise ValueError(f"context must be >= 1, got {context}")
@@ -157,8 +203,12 @@ def decode_attention_workloads(
     common = dict(weight_bits=8, count=heads, kv_group=gs,
                   mapping=N_PARTITION, layers=layers)
     return [
-        GEMMWorkload(stage=ATTN_SCORE, m=m, k=head_dim, n=context, **common),
-        GEMMWorkload(stage=ATTN_OUTPUT, m=m, k=context, n=head_dim, **common),
+        GEMMWorkload(stage=ATTN_SCORE, m=m, k=head_dim, n=context,
+                     page_tokens=page_tokens,
+                     page_axis="n" if page_tokens else "", **common),
+        GEMMWorkload(stage=ATTN_OUTPUT, m=m, k=context, n=head_dim,
+                     page_tokens=page_tokens,
+                     page_axis="k" if page_tokens else "", **common),
     ]
 
 

@@ -158,6 +158,15 @@ class Instrument:
                       ctx: "ExecContext") -> None:
         """A prepared plan is about to execute."""
 
+    def on_page_fetch(self, key: Hashable, nbytes: float,
+                      waste: float, *, stage: str, round_: int,
+                      legion: int) -> None:
+        """A KV-cache page moves (paged stationary operands only; fires at
+        the start of an assignment, before its pass stream).  ``nbytes``
+        is the whole fixed-size page, ``waste`` the last-page padding
+        share of it.  Keys dedup like weight fetches (one multicast fetch
+        per page per GQA group)."""
+
     def on_weight_fetch(self, key: Hashable, nbytes: float) -> None:
         """A stationary tile moves (key identifies the physical transfer)."""
 
@@ -222,6 +231,8 @@ class ExecContext:
     clip_weight_tiles: bool
     wbytes: float
     abytes: float
+    page_tokens: int = 0
+    page_axis: str = ""
     books: Optional[List[ZeroTileBook]] = None
     packed: Optional[List[np.ndarray]] = None
 
@@ -344,6 +355,7 @@ def prepare_context(
         broadcast_stream=broadcast_stream,
         clip_weight_tiles=clip_weight_tiles,
         wbytes=mode.weight_bytes_per_element(cfg), abytes=cfg.dtype_bytes,
+        page_tokens=plan.page_tokens, page_axis=plan.page_axis,
         books=books, packed=packed,
     )
 
@@ -433,6 +445,32 @@ def run_assignment_loop(
         a_exec = 0           # executed (K-window, N-tile) passes
         a_skip = 0           # ZTB fully-sparse windows skipped outright
         a_wbytes = 0.0       # stationary bytes the passes fetched
+
+        if ctx.page_tokens and ctx.page_axis:
+            # Paged stationary KV: the assignment touches every page whose
+            # token span intersects its slice of the token axis (N for
+            # attn_score's K^T, the whole K axis for attn_output's V).
+            # Page keys dedup like weight keys — one multicast fetch per
+            # page per GQA group — so totals count ceil(t/P) whole pages
+            # per distinct KV matrix; the last page's padding beyond the
+            # logical token count is the measured page-boundary waste.
+            # Fired before the pass stream (assignment-clean state), and
+            # ignored by CycleCounter: page granularity reshapes traffic,
+            # never serial cycles.
+            p_sz = ctx.page_tokens
+            if ctx.page_axis == "n":
+                tok_lo, tok_hi, tok_total = a.n_lo, a.n_hi, ctx.n
+                per_tok = ctx.k          # K^T column: K elems per token
+            else:
+                tok_lo, tok_hi, tok_total = 0, ctx.k, ctx.k
+                per_tok = ctx.n          # V row: N elems per token
+            page_nbytes = p_sz * per_tok * ctx.wbytes
+            for p in range(tok_lo // p_sz, -(-tok_hi // p_sz)):
+                waste_toks = max((p + 1) * p_sz - tok_total, 0)
+                _each(instruments, "on_page_fetch",
+                      ("p", plan.stage, wkey, p), page_nbytes,
+                      waste_toks * per_tok * ctx.wbytes,
+                      stage=plan.stage, round_=a.round, legion=a.legion)
 
         # Tiles are served by `banks` parallel accumulators: process them in
         # bank-sized groups (numerically associative — ordering only).
@@ -751,6 +789,8 @@ def _build_validations(
             analytic=TrafficTotals(
                 weight_bytes=sim.weight_bytes, act_bytes=sim.act_bytes,
                 psum_bytes=sim.psum_bytes,
+                page_fetches=sim.page_fetches, page_bytes=sim.page_bytes,
+                page_waste_bytes=sim.page_waste_bytes,
             ),
             rtol=rtol,
         ),

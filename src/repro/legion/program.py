@@ -818,6 +818,7 @@ def _lower_step_layer(
     ltag: str,
     x_link: Optional[str],
     operands: bool,
+    page_tokens: int = 0,
 ) -> Tuple[Program, str]:
     """One explicit transformer layer of a serve-step graph.
 
@@ -891,6 +892,7 @@ def _lower_step_layer(
         score_wl, out_wl = decode_attention_workloads(
             heads=heads, kv_heads=kv_heads, head_dim=head_dim,
             context=t, m=rows, layers=attn_layers,
+            page_tokens=page_tokens,
         )
         lo_row, hi_row = j * rows, (j + 1) * rows
 
@@ -977,6 +979,8 @@ def lower_serve_step(
     seed: int = 0,
     explicit_layers: int = 1,
     operands: bool = True,
+    page_tokens: int = 0,
+    page_tables: Optional[Sequence[Sequence[int]]] = None,
 ) -> Program:
     """Lower one serving step — projections AND attention — to a Program.
 
@@ -1005,9 +1009,34 @@ def lower_serve_step(
     names, workloads, levels, and ancestry, but no synthesized arrays
     (data edges become ``after`` control deps).  Schedulable (the serve
     backend's per-decode-step overlap computation), not executable.
+
+    With ``page_tokens > 0`` each slot's stationary K/V operands are
+    annotated as block-allocated in ``page_tokens``-token pages: the
+    runtime fetches them page-granularly (per-page ``on_page_fetch``
+    events, last-page padding accounted as traffic waste) instead of as
+    idealized contiguous reads.  ``page_tables`` optionally pins the
+    engine's physical page ids — one table per slot, whose length must be
+    exactly ``ceil(context / page_tokens)`` (the allocator and the
+    lowered graph must agree on how many pages back each context).
     """
     by_stage = {op.workload.stage: op for op in projections}
     contexts = tuple(int(t) for t in contexts)
+    if page_tokens < 0:
+        raise ValueError(f"page_tokens must be >= 0, got {page_tokens}")
+    if page_tables is not None:
+        if not page_tokens:
+            raise ValueError("page_tables given without page_tokens")
+        if len(page_tables) != len(contexts):
+            raise ValueError(
+                f"{len(page_tables)} page tables for {len(contexts)} slots"
+            )
+        for j, (tab, t) in enumerate(zip(page_tables, contexts)):
+            need = -(-int(t) // page_tokens)
+            if len(tab) != need:
+                raise ValueError(
+                    f"slot {j}: page table has {len(tab)} pages, context "
+                    f"{t} at {page_tokens} tokens/page needs {need}"
+                )
     if explicit_layers < 1:
         raise ValueError(
             f"explicit_layers must be >= 1, got {explicit_layers}"
@@ -1059,6 +1088,7 @@ def lower_serve_step(
             attn_layers=layers // explicit_layers,
             proj_layer_div=explicit_layers, seed=seed, layer=layer,
             ltag=ltag, x_link=link, operands=operands,
+            page_tokens=page_tokens,
         )
         for st in layer_prog:
             prog.add(st)
@@ -1078,6 +1108,8 @@ def lower_serve_batch(
     rows_per_slot: int = 1,
     seed: int = 0,
     explicit_layers: int = 1,
+    page_tokens: int = 0,
+    page_tables: Optional[Sequence[Sequence[int]]] = None,
 ) -> Program:
     """One decode step's merged batch graph: every active slot's attention
     program interleaved as an antichain under shared projection stages.
@@ -1102,6 +1134,7 @@ def lower_serve_batch(
         projections, m=len(contexts) * rows_per_slot, contexts=contexts,
         heads=heads, kv_heads=kv_heads, head_dim=head_dim, layers=layers,
         seed=seed, explicit_layers=explicit_layers,
+        page_tokens=page_tokens, page_tables=page_tables,
     )
 
 
@@ -1116,6 +1149,9 @@ def lower_serve_mixed(
     layers: int = 1,
     seed: int = 0,
     operands: bool = True,
+    page_tokens: int = 0,
+    chunk_page_tables: Optional[Sequence[Sequence[int]]] = None,
+    decode_page_tables: Optional[Sequence[Sequence[int]]] = None,
 ) -> Program:
     """One *mixed-phase* engine step: in-flight prefill chunks merged with
     the batched decode slots into a single step graph.
@@ -1150,13 +1186,21 @@ def lower_serve_mixed(
                 f"chunk ({rows}, {t}): need rows >= 1 and context >= rows "
                 f"(a chunk attends at least its own rows)"
             )
+    if chunk_page_tables is not None and \
+            len(chunk_page_tables) != len(chunks):
+        raise ValueError(
+            f"{len(chunk_page_tables)} chunk page tables for "
+            f"{len(chunks)} chunks"
+        )
     parts: List[Program] = []
     tags: List[str] = []
     for i, (rows, t) in enumerate(chunks):
         parts.append(lower_serve_step(
             projections, m=rows, contexts=(t,), heads=heads,
             kv_heads=kv_heads, head_dim=head_dim, layers=layers,
-            seed=seed, operands=operands,
+            seed=seed, operands=operands, page_tokens=page_tokens,
+            page_tables=(None if chunk_page_tables is None
+                         else (chunk_page_tables[i],)),
         ))
         tags.append(f"{{p{i}}}")
     if decode_contexts:
@@ -1164,6 +1208,7 @@ def lower_serve_mixed(
             projections, m=len(decode_contexts), contexts=decode_contexts,
             heads=heads, kv_heads=kv_heads, head_dim=head_dim,
             layers=layers, seed=seed, operands=operands,
+            page_tokens=page_tokens, page_tables=decode_page_tables,
         ))
         tags.append("{d}")
     merged = Program.merge(parts, tags=tags)

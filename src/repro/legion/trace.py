@@ -51,6 +51,14 @@ class TrafficTotals:
     weight_bytes: float = 0.0
     act_bytes: float = 0.0
     psum_bytes: float = 0.0
+    # Paged-KV accounting (zero for contiguous runs): distinct page
+    # fetches, whole-page bytes moved, and the last-page padding share.
+    # The waste is ALSO folded into ``weight_bytes`` (a page fetch moves
+    # padding the contiguous model never would), so weight_bytes minus a
+    # contiguous run's equals page_waste_bytes exactly.
+    page_fetches: float = 0.0
+    page_bytes: float = 0.0
+    page_waste_bytes: float = 0.0
 
     @property
     def mem_bytes(self) -> float:
@@ -61,12 +69,18 @@ class TrafficTotals:
             weight_bytes=self.weight_bytes * factor,
             act_bytes=self.act_bytes * factor,
             psum_bytes=self.psum_bytes * factor,
+            page_fetches=self.page_fetches * factor,
+            page_bytes=self.page_bytes * factor,
+            page_waste_bytes=self.page_waste_bytes * factor,
         )
 
     def add(self, other: "TrafficTotals") -> None:
         self.weight_bytes += other.weight_bytes
         self.act_bytes += other.act_bytes
         self.psum_bytes += other.psum_bytes
+        self.page_fetches += other.page_fetches
+        self.page_bytes += other.page_bytes
+        self.page_waste_bytes += other.page_waste_bytes
 
 
 class TrafficTracer:
@@ -86,8 +100,10 @@ class TrafficTracer:
         self.totals = TrafficTotals()
         self._seen_w: set = set()
         self._seen_a: set = set()
+        self._seen_p: set = set()
         self.weight_fetches = 0       # distinct stationary-tile fetches
         self.act_passes = 0           # distinct stream passes
+        self.page_fetches = 0         # distinct KV-page fetches (paged runs)
         self.multicast_hits = 0       # transfers saved by the NoC
 
     def weight_tile(self, key: Hashable, nbytes: float) -> None:
@@ -106,6 +122,23 @@ class TrafficTracer:
         self.act_passes += 1
         self.totals.act_bytes += nbytes
 
+    def page_fetch(self, key: Hashable, nbytes: float,
+                   waste: float) -> None:
+        """One whole-page KV fetch; only the last-page padding (``waste``)
+        adds to ``weight_bytes`` — the page's useful tokens are already
+        counted by the contiguous weight-fetch events, so the tracer's
+        weight total exceeds a contiguous run's by exactly the accounted
+        page-boundary waste."""
+        if key in self._seen_p:
+            self.multicast_hits += 1
+            return
+        self._seen_p.add(key)
+        self.page_fetches += 1
+        self.totals.page_fetches += 1
+        self.totals.page_bytes += nbytes
+        self.totals.page_waste_bytes += waste
+        self.totals.weight_bytes += waste
+
     def psum(self, nbytes: float) -> None:
         self.totals.psum_bytes += nbytes
 
@@ -115,6 +148,11 @@ class TrafficTracer:
 
     def on_act_stream(self, key: Hashable, nbytes: float) -> None:
         self.act_stream(key, nbytes)
+
+    def on_page_fetch(self, key: Hashable, nbytes: float, waste: float,
+                      *, stage: str, round_: int, legion: int) -> None:
+        del stage, round_, legion
+        self.page_fetch(key, nbytes, waste)
 
     def on_psum(self, nbytes: float) -> None:
         self.psum(nbytes)
@@ -140,6 +178,10 @@ class StageValidation:
                                   self.analytic.act_bytes),
             "psum": relative_error(self.measured.psum_bytes,
                                    self.analytic.psum_bytes),
+            # 0-vs-0 counts as exact, so contiguous (un-paged) runs are
+            # unaffected by the page channel.
+            "page": relative_error(self.measured.page_bytes,
+                                   self.analytic.page_bytes),
         }
 
     @property

@@ -9,9 +9,10 @@ serve path's cycle model:
 - metrics:  `MetricsRegistry` — labeled Counter/Gauge/Histogram series
             with deterministic snapshots; `Machine`, `ServeEngine`,
             `LegionServeBackend` accept it via their `metrics=` kwarg
-- loadgen:  Poisson/bursty arrival traces replayed through a live
-            `ServeEngine` on a virtual cycle clock — p50/p99 TTFT,
-            per-token latency, occupancy, rejected/deferred admissions
+- loadgen:  Poisson/bursty/lognormal arrival traces replayed through a
+            live `ServeEngine` on a virtual cycle clock — p50/p99 TTFT,
+            per-token latency, occupancy, rejected/deferred admissions,
+            and SLO-graded goodput (`run_load(slo=SLO(...))`)
 
 Submodules import lazily (PEP 562): `repro.obs.metrics` stays importable
 from `repro.serve.engine` without pulling `loadgen`'s serve-side
@@ -21,10 +22,12 @@ from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.obs.loadgen import (
+        SLO,
         Arrival,
         LoadReport,
         RequestRecord,
         bursty_trace,
+        lognormal_trace,
         poisson_trace,
         run_load,
     )
@@ -48,7 +51,9 @@ _EXPORTS = {
     "Arrival": "repro.obs.loadgen",
     "LoadReport": "repro.obs.loadgen",
     "RequestRecord": "repro.obs.loadgen",
+    "SLO": "repro.obs.loadgen",
     "bursty_trace": "repro.obs.loadgen",
+    "lognormal_trace": "repro.obs.loadgen",
     "poisson_trace": "repro.obs.loadgen",
     "run_load": "repro.obs.loadgen",
     "Counter": "repro.obs.metrics",

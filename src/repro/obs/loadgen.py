@@ -71,6 +71,52 @@ def poisson_trace(
     return out
 
 
+def lognormal_trace(
+    n: int, *, mean_interarrival_cycles: float, sigma: float = 1.0,
+    mean_prompt: float = 8.0, mean_output: float = 3.0,
+    max_prompt: int = 16, max_output: int = 6, quantum: int = 4,
+    seed: int = 0,
+) -> List[Arrival]:
+    """``n`` arrivals with heavy-tailed (lognormal) inter-arrival gaps
+    *and* lognormal prompt/output lengths — the production-shaped load
+    where a few long prompts pin disproportionate KV while short ones
+    stream past (the mix that makes paged eviction earn its keep).
+
+    Prompt lengths round **up** to a multiple of ``quantum`` and clamp to
+    ``[quantum, max_prompt]``, so however heavy the tail, the engine only
+    ever jit-compiles ``max_prompt / quantum`` distinct prefill shapes.
+    ``sigma`` is the log-space spread; the gap distribution's *mean* is
+    held at ``mean_interarrival_cycles`` regardless (mu is solved from
+    it), so traces stay rate-comparable with :func:`poisson_trace`.
+    """
+    if n <= 0:
+        raise ValueError(f"need n > 0 arrivals; got {n}")
+    if mean_interarrival_cycles <= 0 or sigma <= 0:
+        raise ValueError(
+            f"need mean_interarrival_cycles > 0 and sigma > 0; got "
+            f"{mean_interarrival_cycles}, {sigma}"
+        )
+    if quantum < 1 or max_prompt < quantum or max_output < 2:
+        raise ValueError(
+            f"need quantum >= 1, max_prompt >= quantum, max_output >= 2; "
+            f"got {quantum}, {max_prompt}, {max_output}"
+        )
+    rng = np.random.default_rng(seed)
+    mu_gap = float(np.log(mean_interarrival_cycles) - sigma ** 2 / 2.0)
+    t = 0.0
+    out: List[Arrival] = []
+    for _ in range(n):
+        t += float(rng.lognormal(mu_gap, sigma))
+        p = int(rng.lognormal(np.log(mean_prompt), sigma))
+        o = int(rng.lognormal(np.log(mean_output), sigma))
+        p = min(-(-max(p, 1) // quantum) * quantum, max_prompt)
+        out.append(Arrival(
+            time=t, prompt_len=p,
+            max_new_tokens=min(max(o, 2), max_output),
+        ))
+    return out
+
+
 def bursty_trace(
     n: int, *, burst_size: int, burst_gap_cycles: float,
     prompt_lens: Sequence[int] = PROMPT_LENS,
@@ -93,6 +139,38 @@ def bursty_trace(
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Latency service-level objective ``run_load(slo=...)`` grades
+    completions against: with one set, :meth:`LoadReport.summary`'s
+    ``goodput`` counts only completions inside the objective (truncated
+    outputs already never count)."""
+
+    ttft_cycles: Optional[float] = None       # time-to-first-token bound
+    per_token_cycles: Optional[float] = None  # mean decode latency bound
+
+    def __post_init__(self) -> None:
+        for name in ("ttft_cycles", "per_token_cycles"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0, got {v}")
+
+    def met(self, rec: "RequestRecord") -> bool:
+        """Did a *completed* record meet every bound set?  A record with
+        no decode tokens (done at its prompt boundary) has no per-token
+        latency to violate."""
+        if rec.finish is None:
+            return False
+        if self.ttft_cycles is not None:
+            if rec.ttft is None or rec.ttft > self.ttft_cycles:
+                return False
+        if self.per_token_cycles is not None:
+            cpt = rec.cycles_per_token
+            if cpt is not None and cpt > self.per_token_cycles:
+                return False
+        return True
+
+
 @dataclasses.dataclass
 class RequestRecord:
     """One request's lifecycle on the virtual clock."""
@@ -109,6 +187,7 @@ class RequestRecord:
     # Post-mapped from the engine after the replay drains:
     refused: bool = False      # admission policy refused it (never ran)
     truncated: bool = False    # ended by the cache window, not EOS/budget
+    preempted: int = 0         # evictions it suffered (paged engines)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -134,6 +213,7 @@ class LoadReport:
     clock: float               # virtual cycles when the trace drained
     rejected: int
     deferred: int
+    slo: Optional[SLO] = None  # the objective goodput was graded against
 
     def completed(self) -> List[RequestRecord]:
         return [r for r in self.records if r.finish is not None]
@@ -150,16 +230,20 @@ class LoadReport:
         slots = [e["slots"] for e in self.occupancy]
         decode_tokens = sum(r.decode_tokens for r in comp)
         truncated = sum(1 for r in comp if r.truncated)
+        # window-truncated outputs are NOT successes; with an SLO set,
+        # neither are completions outside its latency bounds
+        good = [r for r in comp if not r.truncated]
+        if self.slo is not None:
+            good = [r for r in good if self.slo.met(r)]
         out: Dict[str, float] = {
             "requests": len(self.records),
             "completed": len(comp),
             "rejected": self.rejected,
             "deferred": self.deferred,
             "refused": sum(1 for r in self.records if r.refused),
-            # window-truncated outputs are NOT successes: report them
-            # separately and keep goodput to the naturally-completed set
             "truncated": truncated,
-            "goodput": len(comp) - truncated,
+            "goodput": len(good),
+            "preempted": sum(r.preempted for r in self.records),
             "decode_tokens": decode_tokens,
             "makespan_cycles": self.clock,
             "mean_occupancy": (sum(slots) / len(slots)) if slots else 0.0,
@@ -182,7 +266,7 @@ class LoadReport:
 def run_load(
     engine, backend, trace: Sequence[Arrival], *,
     max_queue: Optional[int] = None, seed: int = 0, metrics=None,
-    max_steps: int = 100_000,
+    max_steps: int = 100_000, slo: Optional[SLO] = None,
 ) -> LoadReport:
     """Replay an arrival trace through a live engine on a virtual clock.
 
@@ -203,6 +287,13 @@ def run_load(
     ``metrics`` (optional, e.g. :class:`repro.obs.metrics
     .MetricsRegistry`) receives ``load_*`` counters/histograms as the
     replay progresses.
+
+    ``slo`` (optional :class:`SLO`) grades completions: the report's
+    ``goodput`` then counts only requests finishing inside the latency
+    objective.  Paged engines surface eviction pressure the same way —
+    ``Request.preempted`` maps back onto the records (a preempted
+    request's TTFT keeps its *first* prefill; the re-prefill only costs
+    clock), and ``summary()["preempted"]`` totals the evictions.
     """
     trace = sorted(trace, key=lambda a: a.time)
     rng = np.random.default_rng(seed)
@@ -218,13 +309,17 @@ def run_load(
             cost = backend.step_tally(tokens, (tokens,)).cycles
             state["clock"] += cost
             rec = by_uid[event["uid"]]
-            rec.first_token = state["clock"]
+            # a re-prefill after preemption costs clock like any prefill,
+            # but only the FIRST prefill defines time-to-first-token
+            if rec.first_token is None:
+                rec.first_token = state["clock"]
+                if metrics is not None:
+                    metrics.histogram("load_ttft_cycles").observe(rec.ttft)
             if event.get("done"):     # finished at its prompt boundary
                 rec.finish = state["clock"]
             occupancy.append({"clock": state["clock"], "phase": "prefill",
                               "slots": len(engine._active())})
             if metrics is not None:
-                metrics.histogram("load_ttft_cycles").observe(rec.ttft)
                 metrics.histogram("load_prefill_step_cycles").observe(cost)
         elif event["kind"] == "decode":
             uids = event["uids"]
@@ -256,11 +351,14 @@ def run_load(
                 if not c.get("last"):
                     continue
                 rec = by_uid[c["uid"]]
-                rec.first_token = state["clock"]
+                # chunked re-prefill keeps the original TTFT (see above)
+                if rec.first_token is None:
+                    rec.first_token = state["clock"]
+                    if metrics is not None:
+                        metrics.histogram("load_ttft_cycles") \
+                            .observe(rec.ttft)
                 if c.get("done"):      # finished at its prompt boundary
                     rec.finish = state["clock"]
-                if metrics is not None:
-                    metrics.histogram("load_ttft_cycles").observe(rec.ttft)
             for uid in uids:
                 rec = by_uid[uid]
                 rec.decode_tokens += 1
@@ -328,8 +426,10 @@ def run_load(
     done_reqs = {r.uid: r for r in engine.finished}
     for uid, rec in by_uid.items():
         req = done_reqs.get(uid)
-        if req is not None and req.truncated:
-            rec.truncated = True
+        if req is not None:
+            if req.truncated:
+                rec.truncated = True
+            rec.preempted = req.preempted
     for req in getattr(engine, "refused", ()):
         rec = by_uid.get(req.uid)
         if rec is not None:
@@ -339,6 +439,9 @@ def run_load(
         metrics.counter("load_requests").inc(len(records))
         metrics.counter("load_rejected").inc(rejected)
         metrics.counter("load_deferred").inc(deferred)
+        preempt_total = sum(rec.preempted for rec in records)
+        if preempt_total:
+            metrics.counter("load_preempted").inc(preempt_total)
         metrics.gauge("load_clock_cycles").set(state["clock"])
         for rec in records:
             if rec.cycles_per_token is not None:
@@ -346,4 +449,4 @@ def run_load(
                     .observe(rec.cycles_per_token)
     return LoadReport(records=records, occupancy=occupancy,
                       clock=state["clock"], rejected=rejected,
-                      deferred=deferred)
+                      deferred=deferred, slo=slo)

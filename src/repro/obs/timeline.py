@@ -93,6 +93,10 @@ class TimelineCell:
     weight_bytes: float = 0.0
     act_bytes: float = 0.0
     psum_bytes: float = 0.0
+    # Paged-KV fetches landing on this cell (zero for contiguous runs).
+    page_fetches: int = 0
+    page_bytes: float = 0.0
+    page_waste_bytes: float = 0.0
 
 
 @dataclasses.dataclass
@@ -305,6 +309,18 @@ class TimelineTracer:
         prog.stage_order.append(stage)
         prog.stage_deps[stage] = tuple(deps)
 
+    def on_page_fetch(self, key, nbytes: float, waste: float, *,
+                      stage: str, round_: int, legion: int) -> None:
+        """Paged-KV fetch — fired at assignment start (clean pass state),
+        before the assignment's first weight fetch."""
+        del key
+        self._open("on_page_fetch")
+        self._require_clean("on_page_fetch")
+        cell = self._cell(stage, round_, legion)
+        cell.page_fetches += 1
+        cell.page_bytes += nbytes
+        cell.page_waste_bytes += waste
+
     def on_weight_fetch(self, key, nbytes: float) -> None:
         self._open("on_weight_fetch")
         if self._pending:
@@ -476,6 +492,12 @@ class TimelineTracer:
                             act_bytes=sl.cell.act_bytes,
                             psum_bytes=sl.cell.psum_bytes,
                         )
+                        if sl.cell.page_fetches:
+                            args.update(
+                                page_fetches=sl.cell.page_fetches,
+                                page_bytes=sl.cell.page_bytes,
+                                page_waste_bytes=sl.cell.page_waste_bytes,
+                            )
                     events.append({
                         "name": f"{sl.stage} r{sl.round_}",
                         "cat": "round", "ph": "X", "ts": base + sl.start,

@@ -8,10 +8,24 @@ prefill into fixed token-budget slices and merges them with the batched
 decode slots into ONE Program per engine step; ``LiveAdmission`` gates
 request intake on the measured ``cache_budget()`` and overlapped token
 rate.
+
+Paged KV serving (``ServeEngine(paged_kv=PagedKVCache(...))``) replaces
+the per-slot contiguous reservation with a fixed pool of
+``page_tokens``-token pages: prompts pin whole pages at admission,
+decode extends page by page, and pool exhaustion preempts the
+latest-admitted slot (pages freed, request re-queued for re-prefill) —
+with page fetches and last-page padding priced by the Legion layer
+(``LegionServeBackend(page_tokens=...)``).
 """
 from repro.serve.admission import AdmissionStats, LiveAdmission
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kv_cache import CacheBudget, kv_bytes_per_token
+from repro.serve.paged_kv import (
+    PageAllocator,
+    PagedKVCache,
+    PageError,
+    PageStats,
+)
 from repro.serve.legion_backend import (
     LegionServeBackend,
     ProjectionOp,
@@ -26,6 +40,10 @@ __all__ = [
     "CacheBudget",
     "LegionServeBackend",
     "LiveAdmission",
+    "PageAllocator",
+    "PageError",
+    "PageStats",
+    "PagedKVCache",
     "ProjectionOp",
     "Request",
     "RequestTally",

@@ -48,6 +48,9 @@ class AdmissionStats:
     deferred_kv: int = 0        # KV-budget pressure deferrals
     deferred_rate: int = 0      # token-rate (latency-horizon) deferrals
     refused: int = 0
+    # Evictions under KV-page pressure (incremented by the engine — the
+    # policy admits, the paged engine preempts; see ServeEngine._preempt).
+    preempted: int = 0
 
     @property
     def deferred(self) -> int:
@@ -87,9 +90,15 @@ class LiveAdmission:
         self.stats = AdmissionStats()
 
     # ------------------------------------------------------------------ #
-    def _kv_tokens(self, request, max_seq: int) -> int:
-        """KV rows this request pins at its peak (window-capped)."""
-        return min(len(request.prompt) + request.max_new_tokens, max_seq)
+    def _kv_tokens(self, request, max_seq: int,
+                   page_tokens: int = 0) -> int:
+        """KV rows this request pins at its peak (window-capped); paged
+        engines pin whole pages, so demand rounds up to a page boundary
+        (the allocator and the policy must price capacity identically)."""
+        tokens = min(len(request.prompt) + request.max_new_tokens, max_seq)
+        if page_tokens:
+            tokens = -(-tokens // page_tokens) * page_tokens
+        return tokens
 
     def _budget(self, engine):
         """The measured CacheBudget, or None before any decode step."""
@@ -107,7 +116,10 @@ class LiveAdmission:
         bpt = (budget.bytes_per_token if budget is not None
                else kv_bytes_per_token(self.backend.model_cfg,
                                        self.dtype_bytes))
-        demand = self._kv_tokens(request, engine.max_seq)
+        page_tokens = (engine.paged_kv.page_tokens
+                       if getattr(engine, "paged_kv", None) is not None
+                       else 0)
+        demand = self._kv_tokens(request, engine.max_seq, page_tokens)
         if bpt and demand * bpt > capacity:
             # hard infeasibility: this request alone outruns the budget
             self.stats.refused += 1
@@ -118,8 +130,8 @@ class LiveAdmission:
             self.stats.admitted += 1
             return ADMIT
         # KV pressure: rows pinned by the active set plus this request
-        pinned = demand + sum(self._kv_tokens(r, engine.max_seq)
-                              for r in active)
+        pinned = demand + sum(
+            self._kv_tokens(r, engine.max_seq, page_tokens) for r in active)
         if bpt and pinned * bpt > capacity:
             self.stats.deferred_kv += 1
             return DEFER

@@ -31,6 +31,9 @@ class Request:
     truncated: bool = False
     # Refused by the admission policy (never prefilled; no output).
     refused: bool = False
+    # Times this request was evicted under KV-page pressure and re-queued
+    # for re-prefill (paged engines only; see repro.serve.paged_kv).
+    preempted: int = 0
 
 
 @dataclasses.dataclass
@@ -42,6 +45,10 @@ class _Slot:
     # once the slot is decode-ready or free).
     filled: int = 0
     staging: object = None
+    # The token array being prefilled: the request's prompt, or — after a
+    # preemption — prompt + output[:-1] (the resume re-prefill; the last
+    # sampled token stays the decode feed).  None once decode-ready.
+    tokens: Optional[np.ndarray] = None
 
 
 def prepare_params(params, *, ternary: bool = True):
@@ -72,7 +79,7 @@ class ServeEngine:
                  max_seq: int = 512, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
                  metrics=None, prefill_chunk_tokens: Optional[int] = None,
-                 admission=None):
+                 admission=None, paged_kv=None):
         if api.decode is None:
             raise ValueError(f"{api.cfg.name} is encoder-only; no decode")
         if prefill_chunk_tokens is not None:
@@ -112,6 +119,24 @@ class ServeEngine:
         # "admit" | "defer" | "refuse"``, e.g. repro.serve.admission
         # .LiveAdmission).  None admits whenever a slot is free.
         self.admission = admission
+        # Paged KV mode (repro.serve.paged_kv.PagedKVCache): requests pin
+        # whole pages at admission, decode steps extend page-by-page, and
+        # page-pool exhaustion preempts the lowest-priority running slot
+        # (pages freed, request re-queued at the head for re-prefill).
+        # None = the idealized contiguous max_slots x max_seq layout.
+        self.paged_kv = paged_kv
+        self.preemptions = 0
+        if paged_kv is not None:
+            alloc = paged_kv.allocator
+            if alloc.pages_needed(max_seq) > alloc.total_pages:
+                # a lone request could then never grow to max_seq — the
+                # preemption loop would starve with nothing left to evict
+                raise ValueError(
+                    f"page pool of {alloc.total_pages} x "
+                    f"{alloc.page_tokens}-token pages cannot back one "
+                    f"max_seq={max_seq} request; need >= "
+                    f"{alloc.pages_needed(max_seq)} pages"
+                )
         # Step observers: called after every prefill / batched decode with a
         # small event dict — the hook accelerator backends attach to (e.g.
         # repro.serve.legion_backend drives the projection GEMMs of each
@@ -254,13 +279,107 @@ class ServeEngine:
             self.metrics.gauge("serve_slot_occupancy").set(
                 len(self._active()) / self.max_slots)
 
+    # ---- paged-KV plumbing (no-ops when self.paged_kv is None) -------- #
+    @staticmethod
+    def _resume_tokens(req: Request) -> np.ndarray:
+        """The tokens a (re-)prefill writes: the prompt, plus — after a
+        preemption — every sampled token but the last (which stays the
+        decode feed, exactly as if the eviction never happened)."""
+        if not req.output:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.output[:-1], np.int32)])
+
+    def _page_admit(self, req: Request, tokens: int) -> bool:
+        """Pin the request's prefill pages; on pool shortfall the request
+        returns to the queue head (admission waits for pages, it does not
+        preempt — only decode-side growth does)."""
+        if self.paged_kv is None:
+            return True
+        if self.paged_kv.admit(req.uid, tokens):
+            return True
+        self.queue.insert(0, req)
+        self.step_log.append({"phase": "defer_page", "uid": req.uid,
+                              "tokens": tokens,
+                              "slots": len(self._active())})
+        if self.metrics is not None:
+            self.metrics.counter("serve_page_deferred").inc()
+        return False
+
+    def _page_release(self, req: Request) -> None:
+        if self.paged_kv is not None and self.paged_kv.holds(req.uid):
+            self.paged_kv.release(req.uid)
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i``: free its pages, count the preemption, and
+        re-queue the request at the head for chunked re-prefill."""
+        slot = self.slots[i]
+        req = slot.request
+        self.paged_kv.evict(req.uid)
+        req.preempted += 1
+        self.preemptions += 1
+        slot.request = None
+        slot.pos = 0
+        slot.filled = 0
+        slot.staging = None
+        slot.tokens = None
+        self.queue.insert(0, req)
+        self.step_log.append({"phase": "preempt", "uid": req.uid,
+                              "tokens": len(req.output),
+                              "slots": len(self._active())})
+        if self.metrics is not None:
+            self.metrics.counter("serve_preempted_total").inc()
+        st = getattr(self.admission, "stats", None)
+        if st is not None and hasattr(st, "preempted"):
+            st.preempted += 1
+
+    def _preempt_victim(self, exclude_uid: int) -> Optional[int]:
+        """Slot index to evict: the latest-admitted page holder other
+        than ``exclude_uid`` (lowest-priority running request)."""
+        by_uid = {s.request.uid: i for i, s in enumerate(self.slots)
+                  if s.request is not None}
+        for uid in self.paged_kv.eviction_order():
+            if uid != exclude_uid and uid in by_uid:
+                return by_uid[uid]
+        return None
+
+    def _ensure_kv(self, active: List[int]) -> List[int]:
+        """Grow every decoding slot's page reservation to cover this
+        step's cache write (``pos + 1`` tokens), evicting lower-priority
+        slots under pool pressure.  Returns ``active`` minus any slots
+        preempted along the way."""
+        if self.paged_kv is None:
+            return active
+        for i in active:
+            slot = self.slots[i]
+            if slot.request is None:     # preempted by an earlier slot
+                continue
+            uid = slot.request.uid
+            while not self.paged_kv.extend(uid, slot.pos + 1):
+                victim = self._preempt_victim(uid)
+                if victim is None:
+                    raise RuntimeError(
+                        f"request {uid} cannot grow its KV pages with "
+                        f"nothing left to evict (pool too small?)"
+                    )
+                self._preempt(victim)
+        if self.metrics is not None:
+            st = self.paged_kv.stats()
+            self.metrics.gauge("serve_page_pinned").set(st.pinned_pages)
+            self.metrics.gauge("serve_page_free").set(st.free_pages)
+            self.metrics.gauge("serve_page_waste_tokens").set(
+                st.waste_tokens)
+        return [i for i in active if self.slots[i].request is not None]
+
     def _admit(self):
         """Fill free slots from the queue; prefill each admitted request.
 
         Legacy (whole-prompt) path: each admitted prompt prefills alone.
         Requests finishing at their prompt boundary (see
         :meth:`_first_token`) complete here and leave the slot free for
-        the next queue entry.
+        the next queue entry.  Paged engines pin the prefill's pages
+        first (a shortfall leaves the request queued) and re-prefill
+        ``prompt + output[:-1]`` for requests resuming after preemption.
         """
         for i, slot in enumerate(self.slots):
             if slot.request is not None:
@@ -269,20 +388,39 @@ class ServeEngine:
                 req = self._next_admittable()
                 if req is None:
                     return
-                plen = len(req.prompt)
+                tokens = self._resume_tokens(req)
+                plen = len(tokens)
+                if not self._page_admit(req, plen):
+                    return
+                resume = bool(req.output)
                 # single-request prefill into this slot's cache lane
                 single_cache = self.api.init_cache(1, self.max_seq)
                 logits, single_cache = self.api.prefill(
                     self.params,
-                    {"tokens": jnp.asarray(req.prompt[None, :])},
+                    {"tokens": jnp.asarray(tokens[None, :])},
                     single_cache,
                 )
-                tok = self._sample(logits[:, -1])
-                finished = self._first_token(req, int(tok[0]), plen)
+                finished = False
+                if resume:
+                    # the re-prefill's sampled token is the one already at
+                    # output[-1] (same cache prefix) — drop it, resume the
+                    # decode loop where the eviction cut it off
+                    pass
+                else:
+                    tok = self._sample(logits[:, -1])
+                    finished = self._first_token(req, int(tok[0]), plen)
                 if not finished:
-                    self.cache = _write_slot(self.cache, single_cache, i)
+                    if self.paged_kv is not None:
+                        self.cache = self.paged_kv.write_slot(
+                            self.cache, single_cache, i, uid=req.uid,
+                            tokens=plen)
+                    else:
+                        self.cache = _write_slot(self.cache, single_cache,
+                                                 i)
                     slot.request = req
                     slot.pos = plen
+                else:
+                    self._page_release(req)
                 self._log_prefill(req, plen)
                 self._notify({"kind": "prefill", "uid": req.uid,
                               "tokens": plen, "done": finished})
@@ -357,13 +495,14 @@ class ServeEngine:
                 req.truncated = (full and not hit_eos
                                  and len(req.output) < req.max_new_tokens)
                 self.finished.append(req)
+                self._page_release(req)
                 slot.request = None
                 slot.pos = 0
 
     def _step_legacy(self):
         """One batched decode step across all active slots."""
         self._admit()
-        active = self._active()
+        active = self._ensure_kv(self._active())
         if not active:
             return False
         logits = self._decode_step(active)
@@ -379,16 +518,21 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
     def _admit_inflight(self):
         """Assign free slots to queued requests (admission-gated) without
-        running any prefill — chunks advance inside the merged step."""
+        running any prefill — chunks advance inside the merged step.
+        Paged engines pin the whole (re-)prefill's pages up front."""
         for slot in self.slots:
             if slot.request is not None:
                 continue
             req = self._next_admittable()
             if req is None:
                 return
+            tokens = self._resume_tokens(req)
+            if not self._page_admit(req, len(tokens)):
+                return
             slot.request = req
             slot.pos = 0
             slot.filled = 0
+            slot.tokens = tokens
             slot.staging = self.api.init_cache(1, self.max_seq)
 
     def _advance_chunks(self) -> List[dict]:
@@ -402,10 +546,11 @@ class ServeEngine:
             req = slot.request
             if req is None or slot.staging is None:
                 continue
-            plen = len(req.prompt)
+            fill = slot.tokens if slot.tokens is not None else req.prompt
+            plen = len(fill)
             c = min(budget, plen - slot.filled)
             pos0 = slot.filled
-            toks = jnp.asarray(req.prompt[None, pos0:pos0 + c])
+            toks = jnp.asarray(fill[None, pos0:pos0 + c])
             logits, slot.staging = self._prefill_chunk(
                 self.params, toks, slot.staging, pos0)
             slot.filled += c
@@ -419,16 +564,30 @@ class ServeEngine:
             last = slot.filled >= plen
             done = False
             if last:
-                tok = self._sample(logits[:, -1])
-                done = self._first_token(req, int(tok[0]), plen)
+                if req.output:
+                    # resuming after preemption: the re-prefill's sample
+                    # duplicates output[-1] (same cache prefix) — discard
+                    # it and rejoin the decode loop mid-stream
+                    pass
+                else:
+                    tok = self._sample(logits[:, -1])
+                    done = self._first_token(req, int(tok[0]), plen)
                 if done:
+                    self._page_release(req)
                     slot.request = None
                 else:
                     # decode-ready: land the staged lane in the batch cache
-                    self.cache = _write_slot(self.cache, slot.staging, i)
+                    if self.paged_kv is not None:
+                        self.cache = self.paged_kv.write_slot(
+                            self.cache, slot.staging, i, uid=req.uid,
+                            tokens=plen)
+                    else:
+                        self.cache = _write_slot(self.cache, slot.staging,
+                                                 i)
                     slot.pos = plen
                 slot.staging = None
                 slot.filled = 0
+                slot.tokens = None
                 self._log_prefill(req, plen, count_tokens=False)
             chunks.append({"uid": req.uid, "tokens": c, "pos0": pos0,
                            "last": last, "done": done})
@@ -440,8 +599,8 @@ class ServeEngine:
         single merged ``step`` event covering both phases."""
         self._admit_inflight()
         chunks = self._advance_chunks()
-        active = [i for i in self._active()
-                  if self.slots[i].staging is None]
+        active = self._ensure_kv([i for i in self._active()
+                                  if self.slots[i].staging is None])
         if not chunks and not active:
             return False
         logits = self._decode_step(active) if active else None

@@ -30,6 +30,16 @@ class CacheBudget:
     # were engine-view overlapped ones — what the same steps would cost
     # without batch-level pipelining.
     serial_tokens_per_sec: Optional[float] = None
+    # Page-granular capacity (``plan(page_tokens=...)``; None = contiguous
+    # planning): the pool geometry a repro.serve.paged_kv.PageAllocator
+    # should be built with, plus the worst-case last-page padding if every
+    # slot ran to max_seq.  ``total_bytes``/``fits_hbm`` then price the
+    # page-quantized footprint, so planner and allocator agree exactly.
+    page_tokens: Optional[int] = None
+    bytes_per_page: Optional[int] = None
+    pages_per_request: Optional[int] = None   # ceil(max_seq / page_tokens)
+    pages_total: Optional[int] = None         # batch * pages_per_request
+    page_waste_bytes: Optional[int] = None    # padding across the batch
 
     def seconds_to_fill(self, max_seq: int) -> Optional[float]:
         """Time to decode one slot's window at the measured rate."""
@@ -60,7 +70,8 @@ def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
          chips: int, dtype_bytes: int = 2,
          cycles_per_token: Optional[float] = None,
          freq_hz: Optional[float] = None,
-         serial_cycles_per_token: Optional[float] = None) -> CacheBudget:
+         serial_cycles_per_token: Optional[float] = None,
+         page_tokens: Optional[int] = None) -> CacheBudget:
     """Capacity (and optionally latency) budget for a serving deployment.
 
     ``cycles_per_token`` is a *measured* per-token decode cost (e.g.
@@ -72,6 +83,14 @@ def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
     optionally records the non-pipelined reference cost alongside (must
     ride on ``cycles_per_token``), giving the budget its
     ``pipelining_speedup``.
+
+    ``page_tokens`` switches to page-granular planning (paged KV serving,
+    ``repro.serve.paged_kv``): capacity is priced in whole
+    ``page_tokens``-token pages per request — each request rounds up to
+    ``ceil(max_seq / page_tokens)`` pages — and the budget carries the
+    pool geometry (``pages_total`` x ``bytes_per_page``) to build the
+    allocator from, plus the worst-case last-page padding
+    (``page_waste_bytes``).
     """
     if (cycles_per_token is None) != (freq_hz is None):
         raise ValueError(
@@ -83,8 +102,23 @@ def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
             "serial_cycles_per_token is the reference for a measured "
             "cycles_per_token; pass both"
         )
+    if page_tokens is not None and page_tokens < 1:
+        raise ValueError(f"page_tokens must be >= 1, got {page_tokens}")
     bpt = kv_bytes_per_token(cfg, dtype_bytes)
-    total = bpt * batch * max_seq
+    bytes_per_page = None
+    pages_per_request = None
+    pages_total = None
+    page_waste = None
+    if page_tokens is not None:
+        bytes_per_page = bpt * page_tokens
+        pages_per_request = -(-max_seq // page_tokens)
+        pages_total = batch * pages_per_request
+        # worst case: every slot runs to max_seq, padding only its last page
+        page_waste = (pages_per_request * page_tokens - max_seq) * bpt \
+            * batch
+        total = pages_total * bytes_per_page
+    else:
+        total = bpt * batch * max_seq
     if cfg.family in ("ssm", "hybrid"):
         di, n = cfg.d_inner, cfg.ssm_state
         total += (di * n // max(cfg.ssm_head_dim, 1) * cfg.ssm_head_dim
@@ -113,4 +147,7 @@ def plan(cfg, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
         fits_hbm=total <= hbm_bytes_per_chip * chips,
         tokens_per_sec=tps, batch_tokens_per_sec=batch_tps,
         serial_tokens_per_sec=serial_tps,
+        page_tokens=page_tokens, bytes_per_page=bytes_per_page,
+        pages_per_request=pages_per_request, pages_total=pages_total,
+        page_waste_bytes=page_waste,
     )

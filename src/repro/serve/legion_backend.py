@@ -106,6 +106,11 @@ class StepTally:
     cycles: int = 0
     executed_passes: int = 0
     skipped_passes: int = 0
+    # Paged-KV fetch accounting (zero for contiguous backends); the waste
+    # is also folded into weight_bytes — see repro.legion.trace.
+    page_fetches: float = 0.0
+    page_bytes: float = 0.0
+    page_waste_bytes: float = 0.0
     stages: Dict[str, StageTally] = dataclasses.field(default_factory=dict)
 
     @property
@@ -125,6 +130,9 @@ class StepTally:
         self.cycles += other.cycles
         self.executed_passes += other.executed_passes
         self.skipped_passes += other.skipped_passes
+        self.page_fetches += other.page_fetches
+        self.page_bytes += other.page_bytes
+        self.page_waste_bytes += other.page_waste_bytes
         for stage, st in other.stages.items():
             agg = self.stages.setdefault(
                 stage, StageTally(traffic=TrafficTotals()))
@@ -288,6 +296,7 @@ class LegionServeBackend:
         executor: Optional[ExecutorBackend] = None,
         attention: bool = True,
         metrics=None,
+        page_tokens: int = 0,
     ) -> None:
         self.cfg = accel_cfg
         self.model_cfg = model_cfg
@@ -296,6 +305,14 @@ class LegionServeBackend:
         self.check_outputs = check_outputs
         self.mem_bw = mem_bw_bytes_per_cycle
         self.attention = attention
+        # Paged-KV pricing: annotate every attention stage's stationary
+        # K/V operand as block-allocated in page_tokens-token pages, so
+        # the runtime fires per-page fetch events and tallies the
+        # last-page padding as traffic waste (0 = contiguous pricing).
+        # Match the engine's PagedKVCache page size.
+        if page_tokens < 0:
+            raise ValueError(f"page_tokens must be >= 0, got {page_tokens}")
+        self.page_tokens = page_tokens
         self.heads = model_cfg.n_heads
         self.kv_heads = model_cfg.kv_heads
         self.head_dim = model_cfg.head_dim_
@@ -471,7 +488,7 @@ class LegionServeBackend:
             out.extend(decode_attention_workloads(
                 heads=self.heads, kv_heads=self.kv_heads,
                 head_dim=self.head_dim, context=t, m=rows,
-                layers=self.layers,
+                layers=self.layers, page_tokens=self.page_tokens,
             ))
         return out
 
@@ -485,7 +502,7 @@ class LegionServeBackend:
             self.ops, m=m, contexts=self._ctx(tuple(contexts)),
             heads=self.heads, kv_heads=self.kv_heads,
             head_dim=self.head_dim, layers=self.layers, seed=self.seed,
-            explicit_layers=explicit_layers,
+            explicit_layers=explicit_layers, page_tokens=self.page_tokens,
         )
 
     def _tally_program(self, program: Program, m: int) -> StepTally:
@@ -511,6 +528,9 @@ class LegionServeBackend:
             tally.cycles += cycles
             tally.executed_passes += rep.cycles.executed_passes * w.layers
             tally.skipped_passes += rep.cycles.skipped_passes * w.layers
+            tally.page_fetches += traffic.page_fetches
+            tally.page_bytes += traffic.page_bytes
+            tally.page_waste_bytes += traffic.page_waste_bytes
             # tallies aggregate by workload stage family ("attn_score"),
             # not per-slot node name ("attn_score[2]")
             agg = tally.stages.setdefault(
@@ -527,6 +547,7 @@ class LegionServeBackend:
         score_wl, out_wl = decode_attention_workloads(
             heads=self.heads, kv_heads=self.kv_heads,
             head_dim=self.head_dim, context=t, m=rows, layers=self.layers,
+            page_tokens=self.page_tokens,
         )
         rng = np.random.default_rng((self.seed, rows, t))
         q = rng.integers(-8, 9, size=(self.heads, rows, self.head_dim)) \
@@ -611,6 +632,7 @@ class LegionServeBackend:
                 self.ops, m=m, contexts=contexts, heads=self.heads,
                 kv_heads=self.kv_heads, head_dim=self.head_dim,
                 layers=self.layers, seed=self.seed, operands=False,
+                page_tokens=self.page_tokens,
             )
             rounds = merge_round_criticals(
                 {st.name: self._rounds[
@@ -667,6 +689,7 @@ class LegionServeBackend:
                     heads=self.heads, kv_heads=self.kv_heads,
                     head_dim=self.head_dim, layers=self.layers,
                     seed=self.seed, operands=False,
+                    page_tokens=self.page_tokens,
                 )
             else:
                 parts = [lower_serve_step(self.ops, m=rows, seed=self.seed,
@@ -709,6 +732,7 @@ class LegionServeBackend:
             decode_contexts=tuple(decode_contexts), heads=self.heads,
             kv_heads=self.kv_heads, head_dim=self.head_dim,
             layers=self.layers, seed=self.seed,
+            page_tokens=self.page_tokens,
         )
 
     def mixed_step_tally(
@@ -762,6 +786,9 @@ class LegionServeBackend:
                 analytic=TrafficTotals(
                     weight_bytes=sim.weight_bytes, act_bytes=sim.act_bytes,
                     psum_bytes=sim.psum_bytes,
+                    page_fetches=sim.page_fetches,
+                    page_bytes=sim.page_bytes,
+                    page_waste_bytes=sim.page_waste_bytes,
                 ),
                 rtol=rtol,
             ))
@@ -798,6 +825,9 @@ class LegionServeBackend:
                 analytic=TrafficTotals(
                     weight_bytes=sim.weight_bytes, act_bytes=sim.act_bytes,
                     psum_bytes=sim.psum_bytes,
+                    page_fetches=sim.page_fetches,
+                    page_bytes=sim.page_bytes,
+                    page_waste_bytes=sim.page_waste_bytes,
                 ),
                 rtol=rtol,
             ))
@@ -811,6 +841,7 @@ class LegionServeBackend:
     def cache_budget(
         self, *, batch: int, max_seq: int, hbm_bytes_per_chip: float,
         chips: int, dtype_bytes: int = 2,
+        page_tokens: Optional[int] = None,
     ):
         """Latency-aware KV budget from the *measured* serve path.
 
@@ -819,8 +850,15 @@ class LegionServeBackend:
         per-token cycles ride along so the
         :class:`~repro.serve.kv_cache.CacheBudget` carries the pipelining
         speedup.  Needs at least one observed decode step.
+
+        ``page_tokens`` defaults to the backend's own page size (paged
+        backends plan page-granular capacity; contiguous ones don't);
+        pass explicitly to override.
         """
         from repro.serve.kv_cache import plan as kv_plan
+
+        if page_tokens is None:
+            page_tokens = self.page_tokens or None
 
         s = self.summary()
         overlapped = s["overlapped_cycles_per_decode_token"]
@@ -835,6 +873,7 @@ class LegionServeBackend:
             hbm_bytes_per_chip=hbm_bytes_per_chip, chips=chips,
             dtype_bytes=dtype_bytes, cycles_per_token=overlapped,
             freq_hz=self.cfg.freq_hz, serial_cycles_per_token=serial,
+            page_tokens=page_tokens,
         )
         if self.metrics is not None:
             m = self.metrics
@@ -892,6 +931,16 @@ class LegionServeBackend:
             "weight_bytes": self.totals.weight_bytes,
             "act_bytes": self.totals.act_bytes,
             "psum_bytes": self.totals.psum_bytes,
+            # paged-KV pricing (zero for contiguous backends): distinct
+            # page fetches, whole-page bytes, and the padding share of
+            # them (waste is also inside weight_bytes — the delta vs a
+            # contiguous backend on the same trace)
+            "page_fetches": self.totals.page_fetches,
+            "page_fetch_bytes": self.totals.page_bytes,
+            "page_waste_bytes": self.totals.page_waste_bytes,
+            "page_waste_frac": (
+                self.totals.page_waste_bytes / self.totals.page_bytes
+                if self.totals.page_bytes else 0.0),
             "cycles": self.totals.cycles,
             "cycles_per_decode_token": decode_cycles,
             "us_per_decode_token": decode_cycles / self.cfg.freq_hz * 1e6,

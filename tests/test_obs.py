@@ -37,14 +37,17 @@ from repro.core.workloads import (
 from repro.legion import Machine, PipelinedExecutor
 from repro.models import build_model
 from repro.obs import (
+    SLO,
     MetricsRegistry,
     TimelineError,
     TimelineTracer,
     bursty_trace,
+    lognormal_trace,
     poisson_trace,
     run_load,
 )
-from repro.serve import LegionServeBackend, ServeEngine
+from repro.obs.loadgen import RequestRecord
+from repro.serve import LegionServeBackend, PagedKVCache, ServeEngine
 from repro.serve.engine import prepare_params
 
 CFG = dlegion()                 # 8 Legions x 8 cores x 16x16
@@ -542,6 +545,89 @@ def test_run_load_reports_truncations(served):
     assert s["goodput"] == 0
     for rec in report.completed():
         assert rec.truncated and not rec.refused
+
+
+def test_lognormal_trace_deterministic_and_quantized():
+    a = lognormal_trace(30, mean_interarrival_cycles=100.0, seed=5)
+    assert a == lognormal_trace(30, mean_interarrival_cycles=100.0, seed=5)
+    assert a != lognormal_trace(30, mean_interarrival_cycles=100.0, seed=6)
+    assert all(x.time <= y.time for x, y in zip(a, a[1:]))
+    # prompt lengths are quantum-rounded and window-clamped; outputs >= 2
+    for r in a:
+        assert r.prompt_len % 4 == 0 and 4 <= r.prompt_len <= 16
+        assert 2 <= r.max_new_tokens <= 6
+    # heavier tail dispersion than poisson at the same mean rate: the
+    # mean-preserving mu keeps total load comparable across generators
+    gaps = [y.time - x.time for x, y in zip(a, a[1:])]
+    assert max(gaps) > np.mean(gaps)
+    with pytest.raises(ValueError):
+        lognormal_trace(0, mean_interarrival_cycles=1.0)
+    with pytest.raises(ValueError):
+        lognormal_trace(4, mean_interarrival_cycles=0.0)
+    with pytest.raises(ValueError):
+        lognormal_trace(4, mean_interarrival_cycles=1.0, sigma=0.0)
+    with pytest.raises(ValueError):
+        lognormal_trace(4, mean_interarrival_cycles=1.0, quantum=0)
+    with pytest.raises(ValueError):
+        lognormal_trace(4, mean_interarrival_cycles=1.0,
+                        max_prompt=2, quantum=4)
+
+
+def test_slo_validation_and_met():
+    with pytest.raises(ValueError):
+        SLO(ttft_cycles=0.0)
+    with pytest.raises(ValueError):
+        SLO(per_token_cycles=-1.0)
+    rec = RequestRecord(uid=1, arrival=0.0, prompt_len=4, max_new_tokens=4,
+                        first_token=10.0, finish=30.0, decode_tokens=4)
+    assert SLO().met(rec)
+    assert SLO(ttft_cycles=10.0).met(rec)
+    assert not SLO(ttft_cycles=9.0).met(rec)
+    assert SLO(per_token_cycles=5.0).met(rec)
+    assert not SLO(per_token_cycles=4.9).met(rec)
+    assert not SLO(ttft_cycles=100.0).met(
+        RequestRecord(uid=2, arrival=0.0, prompt_len=4, max_new_tokens=4))
+    # no decode tokens -> no per-token latency to violate
+    boundary = RequestRecord(uid=3, arrival=0.0, prompt_len=4,
+                             max_new_tokens=4, first_token=5.0, finish=5.0)
+    assert SLO(per_token_cycles=0.1).met(boundary)
+
+
+def test_run_load_paged_preemption(served):
+    """A page pool sized to exactly one max-length window forces
+    evictions under a dense heavy-tailed trace — every preempted request
+    still completes (re-prefill), counters agree across the serve and
+    load layers, and the SLO knob grades the same records."""
+    cfg, api, params = served
+    reg = MetricsRegistry()
+    paged = PagedKVCache(total_pages=8, page_tokens=8)
+    eng = ServeEngine(api, params, max_slots=4, max_seq=64,
+                      paged_kv=paged, metrics=reg)
+    backend = LegionServeBackend(dlegion(), cfg, params, page_tokens=8)
+    backend.attach(eng)
+    trace = lognormal_trace(14, mean_interarrival_cycles=200.0, seed=3)
+    report = run_load(eng, backend, trace, metrics=reg)
+    s = report.summary()
+    assert s["requests"] == s["completed"] == 14
+    assert s["preempted"] > 0 and s["truncated"] == 0
+    assert s["preempted"] == sum(r.preempted for r in report.records)
+    # TTFT pins the FIRST prefill: re-prefill never resets it
+    for rec in report.completed():
+        assert rec.arrival < rec.first_token <= rec.finish
+    # serve-layer and load-layer counters describe the same evictions
+    assert reg.counter("serve_preempted_total").value() == s["preempted"]
+    assert reg.counter("load_preempted").value() == s["preempted"]
+    assert paged.allocator.stats().evictions == s["preempted"]
+    assert paged.allocator.pinned_pages == 0    # all freed at drain
+    # an impossible SLO zeroes goodput over the very same records
+    tight = run_load_summary_with_slo(report, SLO(ttft_cycles=1.0))
+    assert tight["goodput"] == 0 and tight["completed"] == 14
+
+
+def run_load_summary_with_slo(report, slo):
+    """Re-grade an existing report under a different SLO."""
+    import dataclasses
+    return dataclasses.replace(report, slo=slo).summary()
 
 
 # --------------------------------------------------------------------------- #
