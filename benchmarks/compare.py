@@ -10,11 +10,13 @@ gated derived value regressed beyond tolerance:
 Direction is inferred from the key name (benchmarks/README.md schema):
 
 * **higher is better** — ``overlap_x``, ``*speedup*``, ``*tokens_per_sec``,
-  ``*_x`` ratios: a drop below ``old * (1 - rtol)`` is a regression;
+  ``*_x`` ratios (the ``*_vs_tpu_x`` TPUv4i-scale ratios among them),
+  ``*tops`` throughputs: a drop below ``old * (1 - rtol)`` is a
+  regression;
 * **lower is better** — ``*_err`` fractions, ``*cycles*`` / ``*bytes*``
   totals (page-fetch bytes included), ``*waste_frac`` shares
-  (page-boundary padding), ``p50_*`` / ``p99_*`` latencies,
-  ``us_per_call``: a rise above
+  (page-boundary padding), ``*stall_frac`` exposed-prefetch shares,
+  ``p50_*`` / ``p99_*`` latencies, ``us_per_call``: a rise above
   ``old * (1 + rtol)`` is a regression (``us_per_call`` is *reported* but
   never gated — host wall-clock is too noisy across runners);
 * anything else (counts, labels, booleans) — ``preempted`` explicitly
@@ -39,12 +41,17 @@ ATOL = 1e-9                 # absolute slack so old == 0.0 never divides/trips
 UNGATED_KEYS = frozenset({"us_per_call"})
 
 HIGHER_BETTER_EXACT = frozenset({"overlap_x", "goodput"})
-HIGHER_BETTER_SUFFIX = ("speedup", "tokens_per_sec", "_x")
+# "_x" covers the *_vs_tpu_x TPUv4i-scale ratios; "tops" covers attained
+# and peak throughputs (roofline / fig6 / fig8 rows).
+HIGHER_BETTER_SUFFIX = ("speedup", "tokens_per_sec", "_x", "tops")
 # "waste_frac" covers page_waste_frac: last-page padding's share of page
 # traffic must not rise (and "bytes" already covers page_fetch_bytes);
-# other *_frac keys (skip_frac, attn_cycle_frac) stay informational —
-# their direction is not "lower is better".
-LOWER_BETTER_SUFFIX = ("_err", "_mb", "_kb", "_gb", "waste_frac")
+# "stall_frac" covers the exposed weight-prefetch share under finite
+# bandwidth (roofline rows); other *_frac keys (skip_frac,
+# attn_cycle_frac) stay informational — their direction is not "lower is
+# better".
+LOWER_BETTER_SUFFIX = ("_err", "_mb", "_kb", "_gb", "waste_frac",
+                       "stall_frac")
 LOWER_BETTER_SUBSTR = ("cycles", "bytes")
 LOWER_BETTER_PREFIX = ("p50_", "p99_", "us_per")
 # Deltas reported but never regressions: preemption counts shift with any

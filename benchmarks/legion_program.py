@@ -4,9 +4,12 @@ Lowers the full BitNet attention block (QKV -> score -> softmax -> output
 -> O-proj) to a `legion.Program` and executes it through a
 `PipelinedExecutor` Machine:
 
-* the **chain** form (fused qkv_proj) must report overlapped == serial —
-  dependency chains have nothing to overlap, and the serial side equals
-  the per-stage ``simulate()`` sums at 0% error;
+* the **chain** form (fused qkv_proj) serializes its streams, but the
+  attn_output and out_proj boundaries prefetch their stationary fill
+  (cross-level weight prefetch — V and the O-weights exist before their
+  streamed inputs do), so overlapped < serial while the qkv -> score
+  boundary (stationary K produced by qkv itself) hides nothing; the
+  serial side equals the per-stage ``simulate()`` sums at 0% error;
 * the **split** form (q/k/v as independent stages) must overlap: serial >
   overlapped, speedup >= 1.0x — the fill/pipeline ramp of one projection's
   rounds hides under another's streaming;
@@ -56,8 +59,10 @@ def run():
     )
     assert worst == 0.0, f"chain xval err {worst:.4f} (expected exactly 0)"
     pp = rep.pipeline
-    assert pp.overlapped_cycles == pp.serial_cycles, \
-        f"chain must not overlap: {pp}"
+    assert pp.overlapped_cycles < pp.serial_cycles, \
+        f"chain should prefetch V/O-weight fills: {pp}"
+    # the blocked boundary (K from qkv) contributes nothing
+    assert pp.levels[1].hidden_cycles == 0, str(pp)
     rows.append(emit(
         "legion_program/attention_chain", us, {
             "stages": len(chain),

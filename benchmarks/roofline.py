@@ -1,0 +1,147 @@
+"""Roofline benchmark — the stall knee and counted-vs-analytic stalls.
+
+Exercises the finite-bandwidth memory model end to end on the paper's HBM
+budget (128 GB/s per Legion, SS V-B):
+
+* **knee sweep** — locates the bandwidth below which the BitNet attention
+  block leaves the compute-bound plateau (`find_stall_knee`), then sweeps
+  bandwidth points straddling it with every point ALSO executed through a
+  finite-bandwidth `Machine`; the counted stall must match the analytic
+  stall extension of `simulate()` at exactly 0% error (`*_xval_err`
+  rides the 5% trajectory gate but asserts 0 here);
+* **mode matrix** — the same cross-validation across W1.58 / W4 / W8
+  (+ZTB on the quantized modes) at three bandwidth points including one
+  below the knee — the acceptance gate of the finite-bandwidth model;
+* **per-stage roofline** — a `RooflineTracer` rides a below-knee run and
+  reports arithmetic intensity, stall fraction, and attained efficiency
+  (at the bandwidth roof, efficiency approaches 1: the fetch pipe is the
+  bottleneck and it is saturated).
+
+A red run means the measured stall accounting, the analytic stall
+extension, or the knee bisection drifted apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import emit, timed
+from repro.core import attention_workloads, bitnet_1_58b_kv, dlegion
+from repro.core.workloads import GEMMWorkload
+
+
+def knee_sweep() -> List[dict]:
+    from repro.legion import find_stall_knee, hbm_bytes_per_cycle, \
+        sweep_bandwidth
+
+    rows = []
+    cfg = dlegion()
+    spec = dataclasses.replace(bitnet_1_58b_kv(seq_len=256), layers=1)
+    wl = attention_workloads(spec)
+    budget = hbm_bytes_per_cycle(cfg)
+
+    def run():
+        knee = find_stall_knee(cfg, wl, hi=budget)
+        sweep = sweep_bandwidth(
+            cfg, wl, [knee / 8, knee / 2, knee * 1.05, budget],
+            cross_validate=True, label="attention",
+        )
+        return knee, sweep
+
+    (knee, sweep), us = timed(run, repeats=1)
+    assert sweep.worst_rel_err == 0.0, \
+        f"counted vs analytic stall must be exact: {sweep.worst_rel_err}"
+    below = sweep.stalled_points()
+    assert len(below) == 2 and not sweep.points[-1].stalled, \
+        f"sweep must straddle the knee: {sweep.as_dict()}"
+    # at the paper budget the attention block must be compute-bound —
+    # the knee sits below the provisioned 128 GB/s/Legion
+    assert knee < budget, (knee, budget)
+    trace = sweep.to_chrome()
+    rows.append(emit(
+        "roofline/knee_attention", us, {
+            "knee_bw_bytes_per_cycle": sweep.knee_bw,
+            "knee_kcycles": sweep.knee_cycles / 1e3,
+            "budget_headroom_x": budget / sweep.knee_bw,
+            "stall_frac_below_knee": below[0].stall_frac,
+            "worst_xval_err": sweep.worst_rel_err,
+            "trace_events": len(trace["traceEvents"]),
+        },
+    ))
+    return rows
+
+
+def mode_matrix() -> List[dict]:
+    from repro.legion import find_stall_knee, sweep_bandwidth
+
+    rows = []
+    cfg = dlegion()
+
+    def one(bits: int, ztb: bool):
+        w = GEMMWorkload(stage="qkv_proj", m=64, k=1024, n=1024,
+                         weight_bits=bits, count=1, shared_input=True)
+        knee = find_stall_knee(cfg, [w])
+        sweep = sweep_bandwidth(
+            cfg, [w], [knee / 4, knee / 1.5, knee * 2],
+            cross_validate=True, ztb_sparsity=0.5 if ztb else 0.0,
+            label=f"w{bits}{'+ztb' if ztb else ''}",
+        )
+        assert sweep.points[0].stalled and not sweep.points[-1].stalled, \
+            sweep.as_dict()
+        return sweep.worst_rel_err
+
+    def run():
+        out = {}
+        for bits in (2, 4, 8):
+            out[f"w{bits}_xval_err"] = one(bits, ztb=False)
+            if bits < 8:                    # ZTB prunes sub-8-bit weights
+                out[f"w{bits}_ztb_xval_err"] = one(bits, ztb=True)
+        return out
+
+    res, us = timed(run, repeats=1)
+    assert all(v == 0.0 for v in res.values()), res
+    rows.append(emit("roofline/mode_matrix", us, res))
+    return rows
+
+
+def stage_roofline() -> List[dict]:
+    from repro.legion import Machine, find_stall_knee
+    from repro.obs import RooflineTracer
+
+    rows = []
+    cfg = dlegion()
+    spec = dataclasses.replace(bitnet_1_58b_kv(seq_len=256), layers=1)
+    wl = attention_workloads(spec)
+    knee = find_stall_knee(cfg, wl)
+
+    def run():
+        machine = Machine(cfg, mem_bw_bytes_per_cycle=knee / 2)
+        tracer = machine.add_instrument(RooflineTracer())
+        for w in wl:
+            machine.run(w, check_outputs=False, validate=False)
+        return tracer.rows()
+
+    points, us = timed(run, repeats=1)
+    derived = {}
+    for p in points:
+        derived[f"{p.stage}_stall_frac"] = p.stall_frac
+        derived[f"{p.stage}_efficiency"] = p.efficiency
+        assert p.efficiency <= 1.0, p.as_dict()
+    # the projection stage stalls below the knee, and a stalled stage sits
+    # on the bandwidth roof (the fetch pipe is saturated)
+    proj = next(p for p in points if p.stage == "qkv_proj")
+    assert proj.stall_frac > 0.0 and proj.memory_bound, proj.as_dict()
+    assert proj.efficiency > 0.9, proj.as_dict()
+    derived["proj_intensity_ops_per_byte"] = proj.arithmetic_intensity
+    derived["proj_attained_tops"] = \
+        proj.attained_ops_per_cycle * cfg.freq_hz / 1e12
+    rows.append(emit("roofline/stage_points", us, derived))
+    return rows
+
+
+def run() -> List[dict]:
+    return knee_sweep() + mode_matrix() + stage_roofline()
+
+
+if __name__ == "__main__":
+    run()

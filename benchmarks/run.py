@@ -106,7 +106,7 @@ def write_json(json_dir: str, module: str, ok: bool, error: Optional[str],
 def main(argv: Optional[List[str]] = None) -> None:
     from benchmarks import (
         dse, evaluation, kernel_bench, legion_program, legion_runtime,
-        legion_sharded, serve_load, serve_pipeline,
+        legion_sharded, roofline, serve_load, serve_pipeline, tpu_scale,
     )
 
     args = list(sys.argv[1:] if argv is None else argv)
@@ -131,8 +131,10 @@ def main(argv: Optional[List[str]] = None) -> None:
         ("legion_program", legion_program),
         ("legion_runtime", legion_runtime),
         ("legion_sharded", legion_sharded),
+        ("roofline", roofline),
         ("serve_load", serve_load),
         ("serve_pipeline", serve_pipeline),
+        ("tpu_scale", tpu_scale),
     ]
     assert [name for name, _ in modules] == \
         sorted(name for name, _ in modules), "module registry unalphabetized"

@@ -342,4 +342,39 @@ print(f"   page-priced traffic: {s12['page_fetches']:.0f} fetches, "
       f"{s12['page_fetch_bytes'] / 1024:.1f} KiB, last-page waste "
       f"{s12['page_waste_frac']:.1%} of page bytes "
       f"(serial cycles unchanged by construction)")
+
+print("=" * 70)
+print("13. Finite bandwidth — the stall knee, a cross-validated sweep, "
+      "and per-stage roofline points")
+from repro.legion import (find_stall_knee, hbm_bytes_per_cycle,
+                          sweep_bandwidth)
+from repro.obs import RooflineTracer
+
+# How much fetch bandwidth does this attention block actually need?
+# find_stall_knee bisects for the smallest stall-free bytes/cycle; the
+# paper's budget (128 GB/s per Legion) sits far above it.
+wl13 = attention_workloads(spec)
+knee = find_stall_knee(cfg_leg, wl13)
+budget = hbm_bytes_per_cycle(cfg_leg)
+sweep = sweep_bandwidth(cfg_leg, wl13, [knee / 4, knee * 2],
+                        cross_validate=True)
+assert sweep.worst_rel_err == 0.0      # counted stall == analytic stall
+assert sweep.points[0].stalled and not sweep.points[1].stalled
+print(f"   stall knee at {knee:.1f} B/cycle "
+      f"({budget / knee:.0f}x headroom under the paper budget); "
+      f"quarter-knee run stalls {sweep.points[0].stall_frac:.0%} "
+      f"of its cycles, cross-validated at 0% error")
+
+# A RooflineTracer rides a below-knee Machine and reduces the event
+# stream to one point per stage: intensity, stall_frac, efficiency.
+mach13 = Machine(cfg_leg, mem_bw_bytes_per_cycle=knee / 2)
+tr13 = mach13.add_instrument(RooflineTracer())
+for w in wl13:
+    mach13.run(w, check_outputs=False, validate=False)
+for p in tr13.rows():
+    assert p.efficiency <= 1.0
+    bound = "memory" if p.memory_bound else "compute"
+    print(f"   {p.stage:<10} {p.mode:<6} {p.arithmetic_intensity:7.1f} "
+          f"ops/B  stall {p.stall_frac:5.1%}  eff {p.efficiency:.2f} "
+          f"({bound}-bound, {p.legions_used} Legions)")
 print("quickstart complete.")

@@ -115,6 +115,28 @@ def boundary_overlap_cycles(
     return max(0, min(next_fill + next_pipeline, prev_stream + prev_drain))
 
 
+def weight_prefetch_overlap_cycles(
+    prev_stream: int, next_fill: int, *, prev_drain: int = 0,
+) -> int:
+    """Cycles hidden at a round boundary between DATA-DEPENDENT rounds
+    whose incoming *stationary* operand is independent of the outgoing
+    stage: the stationary tiles (weights, or a K-V cache produced earlier)
+    already exist in memory, so their systolic fill proceeds into the
+    double buffer while the outgoing round is still streaming (and
+    draining) the very rows the incoming round will consume.  Only the
+    fill hides — the pipeline ramp is coupled to the streamed input,
+    which does not exist until the outgoing round finishes.  Boundaries
+    whose stationary operand is itself produced by the outgoing stage
+    (attention's S = Q.K^T consuming the just-written K) hide nothing.
+
+    The cross-level half of the pipelined-executor timing rule
+    (``repro.legion.program.compute_pipeline``); sibling of
+    :func:`boundary_overlap_cycles`, which handles the
+    dependency-independent case where fill + pipeline both hide.
+    """
+    return max(0, min(next_fill, prev_stream + prev_drain))
+
+
 # --------------------------------------------------------------------------- #
 # DSE metrics (paper SS III, Figs. 2-4)
 # --------------------------------------------------------------------------- #

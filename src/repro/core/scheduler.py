@@ -81,12 +81,18 @@ def plan_stage(
     program graphs use it to give each node a unique name (e.g. per-slot
     decode attention stages ``attn_score[j]``) so instrument event streams
     and cycle cells stay distinguishable per node.
+
+    ``cfg.mapping_override`` forces the mapping policy regardless of the
+    workload's preference (TPUv4i N-partitions every GEMM across its
+    MXUs) — the same rule the analytic ``simulate()`` applies, so executed
+    plans and analytic results stay comparable on such configs.
     """
     L = cfg.units
+    mapping = cfg.mapping_override or w.mapping
     k_window = cfg.cores * cfg.d
     k_tiles = max(math.ceil(w.k / k_window), 1)
     assignments: List[Assignment] = []
-    if w.mapping == HEAD_PER_UNIT and L > 1:
+    if mapping == HEAD_PER_UNIT and L > 1:
         rounds = math.ceil(w.count / L)
         for inst in range(w.count):
             rnd, leg = divmod(inst, L)
@@ -111,7 +117,7 @@ def plan_stage(
                     multicast_group=group,
                     k_tiles=k_tiles, k_window=k_window,
                 ))
-    return StagePlan(stage=stage or w.stage, mapping=w.mapping,
+    return StagePlan(stage=stage or w.stage, mapping=mapping,
                      assignments=assignments, rounds=rounds,
                      weight_bits=w.weight_bits,
                      page_tokens=w.page_tokens, page_axis=w.page_axis)

@@ -59,6 +59,9 @@ class StageResult:
     fill_cycles: int = 0
     pipeline_cycles: int = 0
     drain_cycles: int = 0
+    # Exposed weight-prefetch cycles under a finite fetch bandwidth (zero at
+    # the default infinite bandwidth) — included in ``cycles``.
+    stall_cycles: int = 0
 
     @property
     def mem_bytes(self) -> float:
@@ -71,6 +74,7 @@ class StageResult:
             "fill": self.fill_cycles,
             "pipeline": self.pipeline_cycles,
             "drain": self.drain_cycles,
+            "stall": self.stall_cycles,
         }
 
     def seconds(self, freq_hz: float) -> float:
@@ -122,6 +126,7 @@ def _simulate_workload(
     cfg: AcceleratorConfig,
     w: GEMMWorkload,
     ztb: Optional[ZTBStats] = None,
+    mem_bw_bytes_per_cycle: float = math.inf,
 ) -> StageResult:
     res = StageResult(stage=w.stage, ops=w.ops)
     r = cfg.r(w.weight_bits)
@@ -165,6 +170,28 @@ def _simulate_workload(
     res.fill_cycles = passes * per_pass.fill * scale
     res.pipeline_cycles = passes * per_pass.pipeline * scale
     res.drain_cycles = per_pass.drain * scale
+
+    # ---- exposed weight-prefetch stalls (finite fetch bandwidth) --------- #
+    # Mirrors ``CycleCounter.record_assignment`` for the round-critical
+    # Legion — the full-slice Legion under N-partition (the memory
+    # controller clips its stationary fetches at the slice edge), any
+    # Legion otherwise (padded R*D tiles) — including the measured model's
+    # per-assignment ``int(round())`` and float evaluation order, so
+    # cross-validation stays exact at 0%.
+    if passes and mem_bw_bytes_per_cycle != math.inf:
+        pass_c = per_pass.stream + per_pass.fill + per_pass.pipeline
+        if mapping == N_PARTITION and units > 1:
+            width_total = n_unit
+        else:
+            width_total = t.nt * r * cfg.d
+        assign_bytes = (
+            max(t.kt - skipped_kt, 0) * cfg.cores * cfg.d * width_total
+            * wbytes
+        )
+        fetch = (assign_bytes / passes) / mem_bw_bytes_per_cycle
+        res.stall_cycles = int(round(passes * max(0.0, fetch - pass_c))) \
+            * scale
+        res.cycles += res.stall_cycles
 
     # ---- stationary (weight / KV) traffic -------------------------------- #
     # Loaded once per tile; padded to full tile grid.  D-Legion multicasts
@@ -224,6 +251,8 @@ def simulate_workload(
     cfg: AcceleratorConfig,
     w: GEMMWorkload,
     ztb: Optional[ZTBStats] = None,
+    *,
+    mem_bw_bytes_per_cycle: float = math.inf,
 ) -> StageResult:
     """Analytic result of ONE workload, without stage-name aggregation.
 
@@ -232,19 +261,27 @@ def simulate_workload(
     share a stage name (e.g. per-slot decode attention), so validation
     needs the single-workload result, not ``simulate()``'s per-stage sum.
     ZTB applies to sub-8-bit weight stages only, exactly as in
-    :func:`simulate`.
+    :func:`simulate`.  A finite ``mem_bw_bytes_per_cycle`` adds the
+    exposed weight-prefetch stalls a ``CycleCounter`` at that bandwidth
+    counts (``stall_cycles``, included in ``cycles``).
     """
-    return _simulate_workload(cfg, w, ztb if w.weight_bits < 8 else None)
+    return _simulate_workload(
+        cfg, w, ztb if w.weight_bits < 8 else None,
+        mem_bw_bytes_per_cycle=mem_bw_bytes_per_cycle,
+    )
 
 
 def simulate(
     cfg: AcceleratorConfig,
     workloads: Iterable[GEMMWorkload],
     ztb: Optional[ZTBStats] = None,
+    *,
+    mem_bw_bytes_per_cycle: float = math.inf,
 ) -> SimReport:
     stages: Dict[str, StageResult] = {}
     for w in workloads:
-        r = simulate_workload(cfg, w, ztb)  # ZTB is on sub-8-bit weights
+        r = simulate_workload(  # ZTB is on sub-8-bit weights
+            cfg, w, ztb, mem_bw_bytes_per_cycle=mem_bw_bytes_per_cycle)
 
         agg = stages.setdefault(w.stage, StageResult(stage=w.stage))
         agg.cycles += r.cycles
@@ -259,6 +296,7 @@ def simulate(
         agg.fill_cycles += r.fill_cycles
         agg.pipeline_cycles += r.pipeline_cycles
         agg.drain_cycles += r.drain_cycles
+        agg.stall_cycles += r.stall_cycles
     return SimReport(arch=cfg.name, freq_hz=cfg.freq_hz, stages=stages)
 
 

@@ -16,6 +16,8 @@ D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
 - modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
 - trace:    NoC-dedup traffic measurement + simulate() cross-validation
 - latency:  cycle counting (fill/stream/drain/prefetch) + eq.-2 cross-val
+- roofline: finite-bandwidth sweeps — the stall knee, the paper's HBM
+            budget, counted-vs-analytic stall cross-validation
 """
 from repro.legion.latency import (
     CycleBreakdown,
@@ -24,6 +26,7 @@ from repro.legion.latency import (
     cross_validate_cycles,
     merge_round_criticals,
     total_cycle_error,
+    validate_mem_bw,
 )
 from repro.legion.machine import (
     ExecContext,
@@ -57,6 +60,13 @@ from repro.legion.program import (
     softmax_int8,
     swiglu_int8,
 )
+from repro.legion.roofline import (
+    BandwidthSweep,
+    SweepPoint,
+    find_stall_knee,
+    hbm_bytes_per_cycle,
+    sweep_bandwidth,
+)
 from repro.legion.runtime import (
     PlanCoverageError,
     synthesize_operands,
@@ -70,6 +80,7 @@ from repro.legion.trace import (
 )
 
 __all__ = [
+    "BandwidthSweep",
     "CycleBreakdown",
     "CycleCounter",
     "CycleValidation",
@@ -91,11 +102,14 @@ __all__ = [
     "RunReport",
     "ShardedExecutor",
     "StageValidation",
+    "SweepPoint",
     "TrafficTotals",
     "TrafficTracer",
     "compute_pipeline",
     "cross_validate",
     "cross_validate_cycles",
+    "find_stall_knee",
+    "hbm_bytes_per_cycle",
     "lower_attention",
     "lower_serve_batch",
     "lower_serve_mixed",
@@ -107,9 +121,11 @@ __all__ = [
     "run_assignment_loop",
     "select_mode",
     "softmax_int8",
+    "sweep_bandwidth",
     "swiglu_int8",
     "synthesize_operands",
     "total_cycle_error",
     "validate_coverage",
+    "validate_mem_bw",
     "validate_options",
 ]

@@ -40,6 +40,22 @@ from repro.core.workloads import GEMMWorkload
 from repro.legion.trace import relative_error
 
 
+def validate_mem_bw(mem_bw_bytes_per_cycle: float) -> float:
+    """Shared fetch-bandwidth validator (single source of the message).
+
+    Every finite-bandwidth consumer (``CycleCounter``, ``Machine``,
+    ``TimelineTracer``, ``sweep_bandwidth``) accepts the same parameter
+    with the same contract: strictly positive, ``math.inf`` meaning
+    prefetch is fully hidden.  Returns the value so callers can assign
+    directly."""
+    if mem_bw_bytes_per_cycle <= 0:
+        raise ValueError(
+            "mem_bw_bytes_per_cycle must be > 0 (math.inf = prefetch "
+            f"fully hidden); got {mem_bw_bytes_per_cycle}"
+        )
+    return mem_bw_bytes_per_cycle
+
+
 @dataclasses.dataclass
 class CycleBreakdown:
     """Where one work chunk's cycles go (all integers, sums exactly)."""
@@ -92,13 +108,8 @@ class CycleCounter:
 
     def __init__(self, cfg: AcceleratorConfig, *,
                  mem_bw_bytes_per_cycle: float = math.inf) -> None:
-        if mem_bw_bytes_per_cycle <= 0:
-            raise ValueError(
-                "mem_bw_bytes_per_cycle must be > 0 (math.inf = prefetch "
-                f"fully hidden); got {mem_bw_bytes_per_cycle}"
-            )
         self.cfg = cfg
-        self.mem_bw = mem_bw_bytes_per_cycle
+        self.mem_bw = validate_mem_bw(mem_bw_bytes_per_cycle)
         # (stage, round) -> legion -> accumulated breakdown
         self._cells: Dict[Tuple[str, int], Dict[int, CycleBreakdown]] = {}
         self.executed_passes = 0

@@ -37,8 +37,9 @@ the nodes in dependency order, threading inter-stage outputs through the
 graph's refs (score -> softmax -> output) and firing stage-boundary
 instrument events; legacy single-plan calls become one-node programs.
 :class:`PipelinedExecutor` overlaps rounds of dependency-independent
-stages, reporting overlapped cycles that are always <= the serial
-per-stage sum (exactly equal on a chain).
+stages — and prefetches a dependent stage's stationary tiles across the
+boundary when they don't come from the outgoing stage — reporting
+overlapped cycles that are always <= the serial per-stage sum.
 """
 from __future__ import annotations
 
@@ -59,7 +60,12 @@ from repro.core.simulator import simulate, simulate_workload
 from repro.core.sparsity import ZeroTileBook, ZTBStats
 from repro.core.workloads import GEMMWorkload, N_PARTITION
 from repro.kernels import dense_tile_gemm
-from repro.legion.latency import CycleBreakdown, CycleCounter, CycleValidation
+from repro.legion.latency import (
+    CycleBreakdown,
+    CycleCounter,
+    CycleValidation,
+    validate_mem_bw,
+)
 from repro.legion.modes import (
     BITLINEAR,
     BLOCK_SPARSE,
@@ -699,10 +705,14 @@ class PipelinedExecutor(ExecutorBackend):
     rounds within each dependency level — and across level boundaries
     whose adjacent rounds have no dependency path (merged-batch slots,
     multi-layer programs) — hiding the incoming round's systolic fill +
-    pipeline ramp under the outgoing round's streaming + drain.
+    pipeline ramp under the outgoing round's streaming + drain.  Even a
+    *dependent* boundary hides its fill when the incoming stationary
+    operand doesn't come from the outgoing stage (cross-level weight
+    prefetch — the tiles already exist in memory).
     The resulting :class:`~repro.legion.program.PipelineReport` rides on
     the :class:`~repro.legion.program.ProgramReport`; overlapped cycles
-    are always <= the serial per-stage sum (exactly equal on a chain),
+    are always <= the serial per-stage sum (exactly equal only when every
+    boundary's stationary operand is produced by the outgoing stage),
     and the serial sum itself cross-validates against ``simulate()``.
     ``LegionServeBackend`` runs each decode step's merged batch graph
     through this model to report the engine-view overlapped latency.
@@ -843,14 +853,10 @@ class Machine:
         validate_options(granularity=granularity,
                          kernel_backend=kernel_backend,
                          accumulators=accumulators)
-        if mem_bw_bytes_per_cycle <= 0:
-            raise ValueError(
-                "mem_bw_bytes_per_cycle must be > 0 (math.inf = prefetch "
-                f"fully hidden); got {mem_bw_bytes_per_cycle}"
-            )
+        mem_bw_bytes_per_cycle = validate_mem_bw(mem_bw_bytes_per_cycle)
         self.cfg = cfg
         self.backend = backend if backend is not None else InProcessExecutor()
-        self.instruments: List[object] = list(instruments or ())
+        self.instruments: List[object] = []
         self.granularity = granularity
         self.kernel_backend = kernel_backend
         self.emulate_cores = emulate_cores
@@ -860,10 +866,36 @@ class Machine:
         # .MetricsRegistry): anything with counter/gauge/histogram
         # get-or-create methods; None disables metric emission.
         self.metrics = metrics
+        for inst in instruments or ():
+            self.add_instrument(inst)
 
     # ------------------------------------------------------------------ #
     def add_instrument(self, instrument: object) -> object:
-        """Register a session-lifetime instrument; returns it for chaining."""
+        """Register a session-lifetime instrument; returns it for chaining.
+
+        Instruments that themselves model the machine (they expose ``cfg``
+        / ``mem_bw`` attributes, e.g. :class:`repro.obs.timeline
+        .TimelineTracer`) silently drift if their model disagrees with the
+        machine's, so registration reconciles them: an instrument
+        constructed without an explicit config (``cfg is None``) inherits
+        the machine's ``cfg``/``mem_bw``; one constructed *with* a config
+        must match on both, else ``ValueError``.
+        """
+        if hasattr(instrument, "cfg") and hasattr(instrument, "mem_bw"):
+            if instrument.cfg is None:
+                instrument.cfg = self.cfg
+                instrument.mem_bw = self.mem_bw
+            elif (instrument.cfg != self.cfg
+                  or instrument.mem_bw != self.mem_bw):
+                raise ValueError(
+                    f"instrument {type(instrument).__name__} models "
+                    f"cfg={getattr(instrument.cfg, 'name', instrument.cfg)} "
+                    f"@ mem_bw={instrument.mem_bw} but the machine runs "
+                    f"cfg={self.cfg.name} @ mem_bw={self.mem_bw} — the "
+                    "instrument would silently mis-model the run; construct "
+                    "it with the machine's cfg/mem_bw (or neither, to "
+                    "inherit them)"
+                )
         self.instruments.append(instrument)
         return instrument
 
@@ -1158,8 +1190,9 @@ class Machine:
                     )
             if measurable and models_run and \
                     (validate or instruments is None):
-                sim = simulate_workload(self.cfg, workload,
-                                        ztb=report.ztb_stats)
+                sim = simulate_workload(
+                    self.cfg, workload, ztb=report.ztb_stats,
+                    mem_bw_bytes_per_cycle=self.mem_bw)
                 scale = workload.layers
                 br = counter.stage_breakdown().get(
                     plan.stage, CycleBreakdown()).scaled(scale)
@@ -1206,7 +1239,8 @@ class Machine:
                 per_cycles.setdefault(stage, CycleBreakdown()).add(
                     br.scaled(w.layers))
 
-        report = simulate(self.cfg, workloads, ztb=ztb_stats)
+        report = simulate(self.cfg, workloads, ztb=ztb_stats,
+                          mem_bw_bytes_per_cycle=self.mem_bw)
         traffic_vals: List[StageValidation] = []
         cycle_vals: List[CycleValidation] = []
         for stage, measured in per_traffic.items():

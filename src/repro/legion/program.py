@@ -41,10 +41,15 @@ This module makes the graph first-class:
   (:func:`repro.core.analytical.boundary_overlap_cycles`) — within a
   level *and* across level boundaries (the outgoing level's last round
   may belong to a stage the incoming stage never consumes, e.g. another
-  slot of a merged batch).  Overlapped cycles are always <= the serial
-  per-stage sum, with exact equality when the graph is a chain (every
-  adjacent round pair is same-stage or data-dependent) — the
-  program-level cross-validation invariant;
+  slot of a merged batch).  A *data-dependent* boundary whose stationary
+  operand is independent of the outgoing stage still hides the incoming
+  fill as a cross-level weight prefetch — the stationary tiles already
+  exist in memory while the streamed input is being produced
+  (:func:`repro.core.analytical.weight_prefetch_overlap_cycles`).
+  Overlapped cycles are always <= the serial per-stage sum, with exact
+  equality when every adjacent round pair is same-stage or
+  stationary-blocked (the incoming stationary operand produced by the
+  outgoing stage) — the program-level cross-validation invariant;
 
 * :func:`reference_outputs` — a pure-NumPy execution of the whole graph
   (no plans, no kernels, no machine) that program runs are checked
@@ -67,7 +72,10 @@ from typing import (
 
 import numpy as np
 
-from repro.core.analytical import boundary_overlap_cycles
+from repro.core.analytical import (
+    boundary_overlap_cycles,
+    weight_prefetch_overlap_cycles,
+)
 from repro.core.scheduler import StagePlan
 from repro.core.sparsity import ZeroTileBook
 from repro.core.workloads import (
@@ -387,6 +395,30 @@ class Program:
             anc[s.name] = frozenset(a)
         return anc
 
+    def stationary_blockers(self) -> Dict[str, frozenset]:
+        """Stages a node's *stationary* operand transitively depends on:
+        ``name -> {producer stages of w} ∪ their ancestors`` (empty when
+        ``w`` is a concrete array, synthesized, or ``None``).
+
+        The cross-level weight-prefetch test behind the pipelined
+        schedule: a round may start fetching its stationary tiles under a
+        data-dependent predecessor round as long as that predecessor is
+        NOT among the stationary operand's own producers — the weights
+        (or an earlier-written K-V cache) already exist in memory even
+        though the streamed input does not yet
+        (:func:`repro.core.analytical.weight_prefetch_overlap_cycles`).
+        """
+        anc = self.ancestors()
+        out: Dict[str, frozenset] = {}
+        for s in self.stages:
+            blockers: set = set()
+            if isinstance(s.w, Ref):
+                for p in s.w.producers:
+                    blockers.add(p)
+                    blockers |= anc.get(p, frozenset())
+            out[s.name] = frozenset(blockers)
+        return out
+
     # ------------------------------------------------------------------ #
     @classmethod
     def merge(
@@ -546,15 +578,17 @@ class PipelineReport:
     """The pipelined executor's overlapped schedule vs the serial sum.
 
     Invariants (the program-level cross-validation): ``overlapped_cycles
-    <= serial_cycles`` always, with equality when the program is a chain
-    (every adjacent round pair is same-stage or data-dependent) —
+    <= serial_cycles`` always, with equality exactly when every adjacent
+    round pair is same-stage or *stationary-blocked* (the incoming
+    round's stationary operand is produced by the outgoing stage —
+    attention's S = Q.K^T after its K).  Dependency-independent
+    boundaries hide fill + pipeline; data-dependent boundaries whose
+    stationary operand already exists (weights, earlier-written K-V)
+    still hide the fill as a cross-level weight prefetch.
     ``serial_cycles`` itself equals the per-stage counted totals, which
     each cross-validate against ``simulate()``.  Hidden cycles at a
-    *level boundary* (the incoming stage independent of the outgoing
-    round's stage — merged-batch slots, or a split projection the next
-    stage never consumes) are attributed to the incoming round's level,
-    so single-stage levels may legitimately report ``overlapped <
-    serial``.
+    *level boundary* are attributed to the incoming round's level, so
+    single-stage levels may legitimately report ``overlapped < serial``.
     """
 
     levels: List[LevelTiming]
@@ -595,21 +629,36 @@ def compute_pipeline(
     """Overlapped-round schedule from per-round critical paths.
 
     Levels serialize for *dependent* work; within a level, the stages'
-    rounds interleave round-robin.  At every boundary between rounds of
-    different stages with **no dependency path** from the outgoing stage
-    to the incoming one, the incoming round's fill + pipeline ramp hides
-    under the outgoing round's streaming + drain
-    (:func:`repro.core.analytical.boundary_overlap_cycles`).  The
-    independence test runs across level boundaries too: in a merged
-    batch graph (or a split projection the next stage never consumes —
-    ``attn_score`` after ``v_proj``), the first round of a level can
-    start filling while the previous level's last, unrelated round still
-    streams.  Rounds of the same stage never overlap (they share the
-    stage's psum banks and stationary buffers), and a data-dependent
-    boundary hides nothing (the incoming operands do not exist yet), so
-    a chain program degenerates to the exact serial sum.
+    rounds interleave round-robin.  Two overlap rules apply at every
+    boundary between rounds of different stages (within a level *and*
+    across level boundaries):
+
+    * **no dependency path** from the outgoing stage to the incoming one
+      — the incoming round's fill + pipeline ramp hides under the
+      outgoing round's streaming + drain
+      (:func:`repro.core.analytical.boundary_overlap_cycles`): in a
+      merged batch graph (or a split projection the next stage never
+      consumes — ``attn_score`` after ``v_proj``), the first round of a
+      level can start filling while the previous level's last, unrelated
+      round still streams;
+    * **data-dependent, stationary operand independent** — the incoming
+      stage consumes the outgoing one, but its *stationary* operand does
+      not (``program.stationary_blockers()``): the stationary tiles
+      already exist in memory, so their fill prefetches into the double
+      buffer under the outgoing round's streaming + drain
+      (:func:`repro.core.analytical.weight_prefetch_overlap_cycles`) —
+      only the pipeline ramp, coupled to the not-yet-produced streamed
+      input, stays exposed.
+
+    Rounds of the same stage never overlap (they share the stage's psum
+    banks and stationary buffers), and a boundary whose stationary
+    operand is itself produced by the outgoing stage (attention's
+    S = Q.K^T after the K it consumes) hides nothing, so the overlapped
+    sum can never beat the streamed work — ``overlapped <= serial``
+    stays the program-level gate.
     """
     ancestors = program.ancestors()
+    w_blockers = program.stationary_blockers()
     levels: List[LevelTiming] = []
     prev: Optional[Tuple[str, CycleBreakdown]] = None
     for level in program.levels():
@@ -626,11 +675,16 @@ def compute_pipeline(
         for name, nb in order:
             if prev is not None:
                 pname, pb = prev
-                if pname != name and pname not in ancestors.get(name, ()):
-                    hidden += boundary_overlap_cycles(
-                        pb.stream, nb.fill, nb.pipeline,
-                        prev_drain=pb.drain,
-                    )
+                if pname != name:
+                    if pname not in ancestors.get(name, ()):
+                        hidden += boundary_overlap_cycles(
+                            pb.stream, nb.fill, nb.pipeline,
+                            prev_drain=pb.drain,
+                        )
+                    elif pname not in w_blockers.get(name, ()):
+                        hidden += weight_prefetch_overlap_cycles(
+                            pb.stream, nb.fill, prev_drain=pb.drain,
+                        )
             prev = (name, nb)
         levels.append(LevelTiming(names, serial, serial - hidden))
     return PipelineReport(levels=levels)
@@ -715,7 +769,11 @@ def lower_attention(
     needed until attn_output, so the graph's first level is a real
     antichain and a pipelining executor has rounds to overlap.  The
     default keeps the paper's fused qkv_proj stage, making the graph a
-    pure chain (overlapped == serial, exactly).
+    pure chain; even there the attn_output and out_proj boundaries hide
+    their fill as cross-level weight prefetch (their stationary operands
+    — V written back at qkv time, the O-weights — exist before the
+    streamed input does), while qkv -> attn_score hides nothing (its
+    stationary K IS qkv's output).
     """
     h, g, hd, s = spec.heads, spec.kv_heads, spec.head_dim, spec.seq_len
     gs = spec.group_size

@@ -1,11 +1,14 @@
-"""Observability subsystem — timelines, metrics, and load generation.
+"""Observability subsystem — timelines, rooflines, metrics, load gen.
 
-Three layers riding the runtime's pinned Instrument event stream and the
+Four layers riding the runtime's pinned Instrument event stream and the
 serve path's cycle model:
 
 - timeline: `TimelineTracer` — per-stage/per-Legion/per-round cycle
             timelines (serial + overlapped placements) exported as Chrome
             trace-event JSON for Perfetto
+- roofline: `RooflineTracer` — per-(stage, mode) arithmetic intensity,
+            machine balance, attained vs peak OPs/cycle, and the exposed
+            weight-prefetch `stall_frac` under finite fetch bandwidth
 - metrics:  `MetricsRegistry` — labeled Counter/Gauge/Histogram series
             with deterministic snapshots; `Machine`, `ServeEngine`,
             `LegionServeBackend` accept it via their `metrics=` kwarg
@@ -37,6 +40,11 @@ if TYPE_CHECKING:  # pragma: no cover
         Histogram,
         MetricsRegistry,
     )
+    from repro.obs.roofline import (
+        RooflineError,
+        RooflinePoint,
+        RooflineTracer,
+    )
     from repro.obs.timeline import (
         ProgramTimeline,
         RoundSlice,
@@ -60,6 +68,9 @@ _EXPORTS = {
     "Gauge": "repro.obs.metrics",
     "Histogram": "repro.obs.metrics",
     "MetricsRegistry": "repro.obs.metrics",
+    "RooflineError": "repro.obs.roofline",
+    "RooflinePoint": "repro.obs.roofline",
+    "RooflineTracer": "repro.obs.roofline",
     "ProgramTimeline": "repro.obs.timeline",
     "RoundSlice": "repro.obs.timeline",
     "Schedule": "repro.obs.timeline",

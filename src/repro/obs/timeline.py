@@ -17,8 +17,10 @@ per-round timeline with cycle-model timestamps:
 * **overlapped placement** — the same rounds shifted by
   :func:`repro.legion.program.compute_pipeline`'s global schedule
   (round-robin tiers within each dependency level, fill+pipeline hidden
-  under the previous independent round's stream+drain), so the makespan
-  equals ``PipelineReport.overlapped_cycles`` exactly and the overlap is
+  under the previous independent round's stream+drain, fill alone
+  prefetched across dependent boundaries whose stationary operand
+  already exists), so the makespan equals
+  ``PipelineReport.overlapped_cycles`` exactly and the overlap is
   *visible* as rounds sliding left.
 
 ``to_chrome()`` exports both placements as Chrome trace-event JSON
@@ -54,9 +56,12 @@ import json
 import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.analytical import boundary_overlap_cycles
+from repro.core.analytical import (
+    boundary_overlap_cycles,
+    weight_prefetch_overlap_cycles,
+)
 from repro.core.config import AcceleratorConfig
-from repro.legion.latency import CycleBreakdown, CycleCounter
+from repro.legion.latency import CycleBreakdown, CycleCounter, validate_mem_bw
 
 # A thread id for the per-stage summary lane, below the Legion lanes.
 STAGE_LANE = 0
@@ -155,8 +160,10 @@ class ProgramTimeline:
 
         Mirrors :func:`repro.legion.program.compute_pipeline` operation
         for operation — level iteration, round-robin tier interleave,
-        ancestry-gated :func:`boundary_overlap_cycles` hiding — so the
-        resulting makespan equals ``PipelineReport.overlapped_cycles``
+        ancestry-gated :func:`boundary_overlap_cycles` hiding plus the
+        cross-level :func:`weight_prefetch_overlap_cycles` fill hiding at
+        dependent boundaries whose stationary operand already exists — so
+        the resulting makespan equals ``PipelineReport.overlapped_cycles``
         exactly (the invariant the telemetry tests pin).
         """
         program = self.program
@@ -168,6 +175,7 @@ class ProgramTimeline:
             for stage in {s for (s, _r) in cells}
         }
         ancestors = program.ancestors()
+        w_blockers = program.stationary_blockers()
         slices: List[RoundSlice] = []
         stage_spans: Dict[str, Tuple[int, int]] = {}
         cursor = 0
@@ -184,11 +192,16 @@ class ProgramTimeline:
                 hidden = 0
                 if prev is not None:
                     pname, pb = prev
-                    if pname != name and pname not in ancestors.get(name, ()):
-                        hidden = boundary_overlap_cycles(
-                            pb.stream, nb.fill, nb.pipeline,
-                            prev_drain=pb.drain,
-                        )
+                    if pname != name:
+                        if pname not in ancestors.get(name, ()):
+                            hidden = boundary_overlap_cycles(
+                                pb.stream, nb.fill, nb.pipeline,
+                                prev_drain=pb.drain,
+                            )
+                        elif pname not in w_blockers.get(name, ()):
+                            hidden = weight_prefetch_overlap_cycles(
+                                pb.stream, nb.fill, prev_drain=pb.drain,
+                            )
                 start = cursor - hidden
                 rnd = stage_rounds[name][tier]
                 legions = cells[(name, rnd)]
@@ -243,7 +256,11 @@ class TimelineTracer:
     the tracer registers on — the tracer derives cycle durations with its
     own internal :class:`CycleCounter` per program, fed from the same
     ``on_assignment_end`` stream, which is what guarantees the exact
-    slice-sum == counter-total invariant.
+    slice-sum == counter-total invariant.  ``Machine.add_instrument``
+    enforces this: a tracer constructed bare (``TimelineTracer()``)
+    inherits the machine's ``cfg``/``mem_bw`` at registration, and one
+    constructed with an explicit config must match the machine's or
+    registration raises.
 
     The tracer also *checks* the pinned event order as it consumes the
     stream: a pass must be preceded by exactly fetch -> stream -> psum, a
@@ -252,10 +269,10 @@ class TimelineTracer:
     :class:`TimelineError` — the conformance half of the telemetry tests.
     """
 
-    def __init__(self, cfg: AcceleratorConfig, *,
+    def __init__(self, cfg: Optional[AcceleratorConfig] = None, *,
                  mem_bw_bytes_per_cycle: float = math.inf) -> None:
         self.cfg = cfg
-        self.mem_bw = mem_bw_bytes_per_cycle
+        self.mem_bw = validate_mem_bw(mem_bw_bytes_per_cycle)
         self.programs: List[ProgramTimeline] = []
         self._current: Optional[ProgramTimeline] = None
         # events of the in-flight pass since the last on_pass/on_window_skip
@@ -290,6 +307,12 @@ class TimelineTracer:
     def on_program_begin(self, program) -> None:
         if self._current is not None and not self._current.complete:
             raise TimelineError("nested on_program_begin")
+        if self.cfg is None:
+            raise TimelineError(
+                "TimelineTracer has no config: construct it with one or "
+                "register it on a Machine (Machine.add_instrument injects "
+                "the machine's cfg/mem_bw)"
+            )
         self._current = ProgramTimeline(
             index=len(self.programs), program=program,
             counter=CycleCounter(self.cfg,

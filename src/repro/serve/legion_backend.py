@@ -104,6 +104,9 @@ class StepTally:
     act_bytes: float = 0.0
     psum_bytes: float = 0.0
     cycles: int = 0
+    # Exposed weight-prefetch cycles (inside ``cycles``) — nonzero only
+    # when the backend's Machine runs a finite mem_bw_bytes_per_cycle.
+    stall_cycles: int = 0
     executed_passes: int = 0
     skipped_passes: int = 0
     # Paged-KV fetch accounting (zero for contiguous backends); the waste
@@ -117,6 +120,11 @@ class StepTally:
     def mem_bytes(self) -> float:
         return self.weight_bytes + self.act_bytes
 
+    @property
+    def stall_frac(self) -> float:
+        """Exposed-prefetch share of the step's cycles (0 = fully hidden)."""
+        return self.stall_cycles / self.cycles if self.cycles else 0.0
+
     def seconds(self, freq_hz: float) -> float:
         return self.cycles / freq_hz
 
@@ -128,6 +136,7 @@ class StepTally:
         self.act_bytes += other.act_bytes
         self.psum_bytes += other.psum_bytes
         self.cycles += other.cycles
+        self.stall_cycles += other.stall_cycles
         self.executed_passes += other.executed_passes
         self.skipped_passes += other.skipped_passes
         self.page_fetches += other.page_fetches
@@ -526,6 +535,8 @@ class LegionServeBackend:
             tally.act_bytes += traffic.act_bytes
             tally.psum_bytes += traffic.psum_bytes
             tally.cycles += cycles
+            tally.stall_cycles += \
+                rep.cycles.stage_breakdown()[name].stall * w.layers
             tally.executed_passes += rep.cycles.executed_passes * w.layers
             tally.skipped_passes += rep.cycles.skipped_passes * w.layers
             tally.page_fetches += traffic.page_fetches
@@ -942,6 +953,10 @@ class LegionServeBackend:
                 self.totals.page_waste_bytes / self.totals.page_bytes
                 if self.totals.page_bytes else 0.0),
             "cycles": self.totals.cycles,
+            # finite-bandwidth serving: the exposed weight-prefetch share
+            # of every step's cycles (0 at the default infinite mem_bw)
+            "stall_cycles": self.totals.stall_cycles,
+            "stall_frac": self.totals.stall_frac,
             "cycles_per_decode_token": decode_cycles,
             "us_per_decode_token": decode_cycles / self.cfg.freq_hz * 1e6,
             # engine view: the merged batch graph, pipelined

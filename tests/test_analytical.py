@@ -75,4 +75,16 @@ def test_input_bandwidth_same_across_legion_configs():
 
 
 def test_hbm_scaling_bound():
+    # paper SS V-B: 16 stacks x 512 GB/s feed 64 Legions at 128 GB/s each
     assert hbm_legions_supported() == 64
+
+
+def test_hbm_scaling_bound_non_default_stacks():
+    # the bound scales linearly with the stack count and budget
+    assert hbm_legions_supported(stacks=8) == 32
+    assert hbm_legions_supported(stacks=1) == 4
+    assert hbm_legions_supported(stacks=16, stack_bw_gbs=256.0) == 32
+    # fatter per-Legion interfaces consume the budget faster
+    assert hbm_legions_supported(legion_bw_gbs=256.0) == 32
+    # partial slices floor: 3 x 100 GB/s feeds two 128 GB/s Legions
+    assert hbm_legions_supported(stacks=3, stack_bw_gbs=100.0) == 2

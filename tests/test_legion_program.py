@@ -8,8 +8,10 @@ The acceptance gate for the `legion.Program` redesign:
   as real GEMMs (K/V stationary activations, GQA multicast), numerically
   exact against a pure-NumPy reference and cross-validated against
   ``simulate()`` at 0% traffic AND cycle error per stage;
-* `PipelinedExecutor` overlapped cycles are <= the serial per-stage sum,
-  with exact equality on a pure dependency chain;
+* `PipelinedExecutor` overlapped cycles are <= the serial per-stage sum;
+  a dependent boundary whose stationary operand already exists prefetches
+  exactly its fill (``weight_prefetch_overlap_cycles``), while a boundary
+  whose stationary operand comes from the outgoing stage hides nothing;
 * decode-shaped act-to-act workloads (M=1, K/N = context t) cross-validate
   across the W1.58/W4/W8 mode matrix, including the GQA kv_group fanout;
 * the graph validates (dup names, unknown refs, cycles, operand pairing)
@@ -28,6 +30,10 @@ import numpy as np
 import pytest
 
 from repro.core import dlegion, simulate_workload
+from repro.core.analytical import (
+    boundary_overlap_cycles,
+    weight_prefetch_overlap_cycles,
+)
 from repro.core.scheduler import kv_multicast_fanout, plan_stage
 from repro.core.workloads import (
     ATTN_OUTPUT,
@@ -166,17 +172,40 @@ def test_reference_outputs_requires_concrete_dense_operands():
 
 
 # --------------------------------------------------------------------------- #
-# PipelinedExecutor: overlapped <= serial, exact on a chain
+# PipelinedExecutor: overlapped <= serial; dependent boundaries prefetch
+# their fill unless the stationary operand comes from the outgoing stage
 # --------------------------------------------------------------------------- #
 
-def test_pipelined_chain_equals_serial_and_simulate_sum():
+def _last_first(rep, prev_name, next_name):
+    """Boundary rounds of two adjacent chain stages: (prev's last round
+    critical, next's first round critical)."""
+    prev_rc = rep[prev_name].cycles.round_criticals()[prev_name]
+    next_rc = rep[next_name].cycles.round_criticals()[next_name]
+    return prev_rc[-1], next_rc[0]
+
+
+def test_pipelined_chain_prefetches_existing_stationary_operands():
     prog = lower_attention(SPEC)                      # pure chain
     rep = Machine(CFG, backend=PipelinedExecutor()).run(prog)
     assert rep.backend == "pipelined"
     pp = rep.pipeline
     assert pp is not None and pp.ok
-    assert pp.overlapped_cycles == pp.serial_cycles   # nothing to overlap
-    assert pp.serial_cycles == rep.serial_cycles == rep.total_cycles
+    lv = pp.levels
+    # qkv -> attn_score hides nothing: the stationary K IS qkv's output
+    assert lv[1].stages == ("attn_score",)
+    assert lv[1].hidden_cycles == 0
+    # attn_score -> attn_output prefetches V (written back at qkv time):
+    # exactly the incoming fill, bounded by the outgoing stream + drain
+    pb, nb = _last_first(rep, "attn_score", "attn_output")
+    assert lv[2].hidden_cycles == weight_prefetch_overlap_cycles(
+        pb.stream, nb.fill, prev_drain=pb.drain) > 0
+    # attn_output -> out_proj prefetches the concrete O-weights
+    pb, nb = _last_first(rep, "attn_output", "out_proj")
+    assert lv[3].hidden_cycles == weight_prefetch_overlap_cycles(
+        pb.stream, nb.fill, prev_drain=pb.drain) > 0
+    assert pp.overlapped_cycles < pp.serial_cycles
+    assert pp.serial_cycles == rep.serial_cycles
+    assert rep.total_cycles == pp.overlapped_cycles
     # serial side == the per-stage simulate() sums (0% cycle error)
     analytic = sum(r.cycle_validation.analytic
                    for r in rep.stage_reports.values())
@@ -184,6 +213,27 @@ def test_pipelined_chain_equals_serial_and_simulate_sum():
     # numerics are untouched by the timing overlay
     ref = reference_outputs(prog)
     assert all(np.array_equal(rep.outputs[k], ref[k]) for k in ref)
+
+
+def test_pipelined_chain_with_produced_stationaries_stays_serial():
+    """A chain whose every stationary operand comes from the previous
+    stage has nothing to prefetch: overlapped == serial, exactly."""
+    rng = np.random.default_rng(11)
+    x = rng.integers(-8, 9, size=(16, 64)).astype(np.int8)
+    wa = rng.integers(-8, 9, size=(64, 64)).astype(np.int8)
+    mid_x = Ref("a", lambda o: requantize_int8(o[0]))
+    mid_w = Ref("a", lambda o: requantize_int8(o[0]).T.copy())
+    prog = Program([
+        ProgramStage(name="a", workload=_wl("a", m=16, k=64, n=64),
+                     x=x, w=wa),
+        ProgramStage(name="b", workload=_wl("b", m=16, k=64, n=16),
+                     x=mid_x, w=mid_w, w_source=STATIONARY_ACT),
+    ])
+    rep = Machine(CFG, backend=PipelinedExecutor()).run(prog)
+    pp = rep.pipeline
+    assert pp.ok
+    assert pp.hidden_cycles == 0
+    assert pp.overlapped_cycles == pp.serial_cycles == rep.total_cycles
 
 
 def test_pipelined_split_graph_overlaps():
@@ -194,11 +244,15 @@ def test_pipelined_split_graph_overlaps():
     assert pp.overlapped_cycles < pp.serial_cycles    # q/k/v rounds overlap
     assert pp.speedup > 1.0
     assert rep.total_cycles == pp.overlapped_cycles < rep.serial_cycles
-    # only the independent first level overlapped; the chain tail is exact
+    # the independent first level overlaps fill + pipeline; every chain-
+    # tail boundary still prefetches its fill (attn_score enters after a
+    # q_proj round but takes its stationary K from k_proj; attn_output's
+    # V and out_proj's weights exist before their streamed inputs)
     lv = pp.levels
     assert lv[0].stages == ("q_proj", "k_proj", "v_proj")
-    assert lv[0].hidden_cycles == pp.hidden_cycles > 0
-    assert all(l.hidden_cycles == 0 for l in lv[1:])
+    assert lv[0].hidden_cycles > 0
+    assert all(l.hidden_cycles > 0 for l in lv[1:])
+    assert pp.hidden_cycles == sum(l.hidden_cycles for l in lv)
     ref = reference_outputs(prog)
     assert all(np.array_equal(rep.outputs[k], ref[k]) for k in ref)
 
@@ -520,8 +574,10 @@ def test_program_merge_tags_refs_and_external_producers():
 
 
 def test_pipelined_diamond_graph():
-    """Diamond a -> (b, c) -> d: the independent middle pair overlaps, the
-    dependent edges do not, and outputs stay bit-exact vs NumPy."""
+    """Diamond a -> (b, c) -> d: the independent middle pair overlaps
+    fill + pipeline; the dependent edges prefetch exactly their fill
+    (b/c/d's weights are concrete — they exist before a's output does),
+    and outputs stay bit-exact vs NumPy."""
     rng = np.random.default_rng(5)
     x = rng.integers(-8, 9, size=(16, 128)).astype(np.int8)
     wa = rng.integers(-8, 9, size=(128, 64)).astype(np.int8)
@@ -552,11 +608,21 @@ def test_pipelined_diamond_graph():
     assert pp.ok
     assert pp.overlapped_cycles < pp.serial_cycles
     lv = pp.levels
-    # only the independent b/c pair overlaps: a -> b and (b, c) -> d are
-    # data-dependent boundaries, so the first and last level stay serial
-    assert lv[0].hidden_cycles == 0
-    assert lv[1].hidden_cycles == pp.hidden_cycles > 0
-    assert lv[2].hidden_cycles == 0
+    assert lv[0].hidden_cycles == 0                   # nothing precedes a
+    # level 1: a -> b prefetches b's concrete weights (fill only), then
+    # the independent b -> c boundary overlaps fill + pipeline
+    ab, bb = _last_first(rep, "a", "b")
+    _, cb = _last_first(rep, "b", "c")
+    assert lv[1].hidden_cycles == (
+        weight_prefetch_overlap_cycles(ab.stream, bb.fill,
+                                       prev_drain=ab.drain)
+        + boundary_overlap_cycles(bb.stream, cb.fill, cb.pipeline,
+                                  prev_drain=bb.drain)
+    )
+    # level 2: c -> d is data-dependent but d's weights are concrete
+    cb2, db = _last_first(rep, "c", "d")
+    assert lv[2].hidden_cycles == weight_prefetch_overlap_cycles(
+        cb2.stream, db.fill, prev_drain=cb2.drain) > 0
 
 
 # --------------------------------------------------------------------------- #
@@ -590,9 +656,13 @@ def test_lower_serve_step_multi_layer_explicit_deps():
     for r in rep.stage_reports.values():
         assert all(e == 0.0 for e in r.traffic_validation.errors.values())
         assert r.cycle_validation.rel_err == 0.0
-    # one slot -> the layered graph is a pure chain: overlapped == serial
+    # one slot -> the layered graph is a pure chain; its stationary
+    # operands (weights, per-slot KV caches) all exist before their
+    # streamed inputs, so every boundary prefetches its fill — overlapped
+    # strictly below serial, never beyond the prefetch bound
     pp = Machine(CFG, backend=PipelinedExecutor()).run(prog).pipeline
-    assert pp.overlapped_cycles == pp.serial_cycles
+    assert pp.ok
+    assert pp.overlapped_cycles < pp.serial_cycles
 
 
 def test_lower_serve_step_multi_layer_validation():

@@ -293,9 +293,11 @@ def test_mixed_step_program_trace_parity(served):
          rep.pipeline.overlapped_cycles * cfg.layers)
 
 
-def test_chain_program_overlapped_equals_serial():
-    """A pure dependency chain leaves nothing to overlap: both placements
-    must agree (and with the PipelineReport's own degenerate case)."""
+def test_chain_program_prefetch_and_blocked_parity():
+    """Both chain-boundary cases stay in exact tracer/report parity: a
+    concrete stationary operand prefetches its fill across the dependent
+    boundary; a stationary operand produced by the outgoing stage blocks
+    all hiding (overlapped == serial, the degenerate case)."""
     from repro.legion import Program, ProgramStage, Ref, requantize_int8
 
     w1 = GEMMWorkload(stage=QKV_PROJ, m=16, k=256, n=128, weight_bits=2,
@@ -315,8 +317,32 @@ def test_chain_program_overlapped_equals_serial():
     tracer = TimelineTracer(CFG)
     rep = Machine(CFG, backend=PipelinedExecutor(),
                   instruments=[tracer]).run(prog, validate=False)
-    assert tracer.overlapped_cycles() == tracer.serial_cycles()
-    assert rep.pipeline.hidden_cycles == 0
+    # b's weights exist before a's output does: its fill prefetches
+    assert rep.pipeline.hidden_cycles > 0
+    assert tracer.overlapped_cycles() == rep.pipeline.overlapped_cycles
+    assert tracer.serial_cycles() == rep.pipeline.serial_cycles
+    tl = tracer.programs[-1]
+    assert tl.overlapped_schedule().makespan == \
+        tl.serial_schedule().makespan - rep.pipeline.hidden_cycles
+
+    # blocked variant: b's stationary operand IS a's output — nothing to
+    # prefetch, both placements agree exactly
+    w2b = GEMMWorkload(stage="attn_score", m=16, k=128, n=16, weight_bits=8,
+                       count=1, shared_input=True, mapping=N_PARTITION)
+    prog2 = Program()
+    prog2.add(ProgramStage(
+        name="a", workload=w1,
+        x=rng.integers(-8, 9, size=(16, 256)).astype(np.int8),
+        w=rng.integers(-1, 2, size=(1, 256, 128)).astype(np.int8)))
+    prog2.add(ProgramStage(
+        name="b", workload=w2b, x=Ref("a", transform=requantize_int8),
+        w=Ref("a", transform=lambda o: requantize_int8(o)
+              .transpose(0, 2, 1))))
+    tracer2 = TimelineTracer(CFG)
+    rep2 = Machine(CFG, backend=PipelinedExecutor(),
+                   instruments=[tracer2]).run(prog2, validate=False)
+    assert rep2.pipeline.hidden_cycles == 0
+    assert tracer2.overlapped_cycles() == tracer2.serial_cycles()
 
 
 def test_export_round_trips(tmp_path):

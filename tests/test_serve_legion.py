@@ -250,9 +250,12 @@ def test_engine_view_overlapped_latency(served):
     serial, overlapped = backend.step_pipeline(2, (9, 9))
     assert serial == backend.step_tally(2, (9, 9)).cycles
     assert overlapped < serial
-    # single-slot steps are chains: nothing to overlap
+    # single-slot steps are chains, but every stationary operand (weights,
+    # the slot's KV cache) exists before its streamed input, so the
+    # dependent boundaries still prefetch their fill: overlapped < serial
     s1, o1 = backend.step_pipeline(1, (16,))
-    assert s1 == o1 == backend.step_tally(1, (16,)).cycles
+    assert s1 == backend.step_tally(1, (16,)).cycles
+    assert 0 < o1 < s1
 
 
 def test_cache_budget_feeds_overlapped_rate(served):
