@@ -41,7 +41,9 @@ ATOL = 1e-9                 # absolute slack so old == 0.0 never divides/trips
 UNGATED_KEYS = frozenset({"us_per_call"})
 
 HIGHER_BETTER_EXACT = frozenset({"overlap_x", "goodput"})
-# "_x" covers the *_vs_tpu_x TPUv4i-scale ratios; "tops" covers attained
+# "_x" covers the *_vs_tpu_x TPUv4i-scale ratios and the workload-zoo
+# expert_skip_savings_x (dense-E over routed k-of-E weight bytes — the
+# MoE program-level ZTB skip must not shrink); "tops" covers attained
 # and peak throughputs (roofline / fig6 / fig8 rows).
 HIGHER_BETTER_SUFFIX = ("speedup", "tokens_per_sec", "_x", "tops")
 # "waste_frac" covers page_waste_frac: last-page padding's share of page

@@ -107,6 +107,7 @@ def main(argv: Optional[List[str]] = None) -> None:
     from benchmarks import (
         dse, evaluation, kernel_bench, legion_program, legion_runtime,
         legion_sharded, roofline, serve_load, serve_pipeline, tpu_scale,
+        workload_zoo,
     )
 
     args = list(sys.argv[1:] if argv is None else argv)
@@ -135,6 +136,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         ("serve_load", serve_load),
         ("serve_pipeline", serve_pipeline),
         ("tpu_scale", tpu_scale),
+        ("workload_zoo", workload_zoo),
     ]
     assert [name for name, _ in modules] == \
         sorted(name for name, _ in modules), "module registry unalphabetized"

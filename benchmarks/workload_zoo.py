@@ -1,0 +1,96 @@
+"""Workload-zoo benchmark — the full config registry through the unified
+``legion.lower(spec)`` front door.
+
+Every ``repro.configs`` registry architecture (all 12, ``reduced()`` for
+CPU speed) lowers through :func:`repro.legion.zoo_spec` to its
+family-appropriate Program — attention block (dense / encoder / vlm), MoE
+FFN with expert-skip ZTB sparsity (moe), chunked SSD scan (ssm), or the
+shared-attention + SSD hybrid period (zamba2) — and executes through
+``Machine.run(Program)``:
+
+* every stage's outputs are bit-exact against the pure-NumPy
+  ``reference_outputs`` execution (``bit_err`` row key, gated at 0);
+* measured traffic AND cycles cross-validate against ``simulate()`` at
+  exactly 0% (``xval_err``);
+* the MoE rows additionally report ``expert_skip_savings_x`` — the
+  dense-E step's weight bytes over the routed k-of-E step's (higher is
+  better: the program-level ZTB skip is doing its job), and the k-of-E
+  traffic must equal dense minus the skipped experts' stationary bytes
+  EXACTLY (``skip_eq_err``).
+
+A red run means a family lowering, the expert-skip traffic accounting, or
+the zoo dispatch regressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.configs import arch_names, get_config, reduced
+from repro.core import dlegion
+
+
+def _worst_err(rep) -> float:
+    worst = 0.0
+    for r in rep.stage_reports.values():
+        if r.traffic_validation is not None:
+            worst = max(worst, *r.traffic_validation.errors.values())
+        if r.cycle_validation is not None:
+            worst = max(worst, r.cycle_validation.rel_err)
+    return worst
+
+
+def run():
+    from repro.legion import (
+        Machine,
+        MoESpec,
+        lower,
+        moe_stage_names,
+        reference_outputs,
+        zoo_spec,
+    )
+
+    rows = []
+    machine = Machine(dlegion())
+    for arch in arch_names():
+        cfg = reduced(get_config(arch))
+        spec = zoo_spec(cfg)
+        prog = lower(spec)
+        rep, us = timed(machine.run, prog, repeats=1)
+        assert rep.ok, f"{arch}: {rep}"
+        ref = reference_outputs(prog)
+        mism = sum(not np.array_equal(rep.outputs[n], ref[n]) for n in ref)
+        derived = {
+            "family": cfg.family,
+            "spec": type(spec).__name__,
+            "stages": len(prog),
+            "bit_err": mism / len(ref),
+            "xval_err": _worst_err(rep),
+        }
+
+        if isinstance(spec, MoESpec):
+            # expert-skip savings vs the dense-E twin (same seed -> same
+            # tokens and expert weights; only the routing differs)
+            dense = dataclasses.replace(spec, top_k=spec.n_experts,
+                                        chosen=None)
+            rep_d = machine.run(lower(dense))
+            assert rep_d.ok, f"{arch} dense: {rep_d}"
+            total = lambda r: sum(sr.traffic.weight_bytes
+                                  for sr in r.stage_reports.values())
+            _, skipped = spec.routing()
+            skipped_bytes = sum(
+                rep_d.stage_reports[n].traffic.weight_bytes
+                for e in skipped for n in moe_stage_names(e)
+            )
+            wk, wd = total(rep), total(rep_d)
+            derived["expert_skip_savings_x"] = wd / wk
+            derived["skip_eq_err"] = abs(wk - (wd - skipped_bytes)) / wd
+
+        rows.append(emit(f"zoo_{arch.replace('-', '_')}", us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

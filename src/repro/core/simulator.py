@@ -241,8 +241,10 @@ def _simulate_workload(
 
     # ---- psum traffic ----------------------------------------------------- #
     # KT accumulation rounds; first is write-only, the rest read-modify-write.
-    kt_eff = max(t.kt - skipped_kt, 1)
-    rmw = 2 * kt_eff - 1
+    # The full-skip limit (every window ZTB-gated — an unchosen MoE expert)
+    # touches the accumulators zero times, matching the runtime's silence.
+    kt_eff = max(t.kt - skipped_kt, 0)
+    rmw = max(2 * kt_eff - 1, 0)
     res.psum_bytes = w.m * w.n * 4.0 * rmw * w.count * w.layers
     return res
 

@@ -33,6 +33,17 @@ Q_PROJ = "q_proj"
 K_PROJ = "k_proj"
 V_PROJ = "v_proj"
 
+# Workload-zoo stage names (``repro.legion.lowering``): the MoE FFN block
+# (router + per-expert SwiGLU up/down — MLP names shared with the serve
+# backend's dense projections) and the Mamba-2 SSD scan's chunked GEMMs.
+ROUTER = "router"
+MLP_UP = "mlp_up"        # w1 & w3: [d_model, d_ff], two instances, shared x
+MLP_DOWN = "mlp_down"    # w2:      [d_ff, d_model]
+SSD_SCORE = "ssd_score"  # C_c @ B_c^T     [q, n] @ [n, q], group-shared
+SSD_INTRA = "ssd_intra"  # (scores*decay) @ dtx_c   [q, q] @ [q, p] per head
+SSD_STATE = "ssd_state"  # (B_c*decay)^T @ dtx_c    [n, q] @ [q, p] per head
+SSD_INTER = "ssd_inter"  # (C_c*exp(la)) @ h_prev   [q, n] @ [n, p] per head
+
 # Mapping policy per stage (paper SS IV-C):
 #   head_per_unit — each Legion takes one head workload, round-robin
 #   n_partition   — the workload's N dim is split across all Legions
@@ -209,6 +220,64 @@ def decode_attention_workloads(
         GEMMWorkload(stage=ATTN_OUTPUT, m=m, k=context, n=head_dim,
                      page_tokens=page_tokens,
                      page_axis="k" if page_tokens else "", **common),
+    ]
+
+
+def moe_ffn_workloads(
+    *, tokens: int, d_model: int, d_ff: int, n_experts: int,
+    weight_bits: int = 2, layers: int = 1,
+) -> List[GEMMWorkload]:
+    """The MoE FFN block's GEMM stages: router + ONE expert's SwiGLU pair.
+
+    The router is a single int8 GEMM over all tokens; each expert runs the
+    same SwiGLU shapes as a dense MLP (w1/w3 share the streamed tokens,
+    w2 consumes the combined gate*value).  ``repro.legion.lowering``
+    instantiates the expert pair once per expert — the k-of-E routing
+    decision then gates unchosen experts' stages as fully-sparse ZTB
+    windows, so these templates describe BOTH the dense-E and the k-of-E
+    step (the difference is program-level sparsity, not shape).
+    """
+    return [
+        GEMMWorkload(stage=ROUTER, m=tokens, k=d_model, n=n_experts,
+                     weight_bits=8, count=1, mapping=N_PARTITION,
+                     layers=layers),
+        GEMMWorkload(stage=MLP_UP, m=tokens, k=d_model, n=d_ff,
+                     weight_bits=weight_bits, count=2, shared_input=True,
+                     mapping=HEAD_PER_UNIT, layers=layers),
+        GEMMWorkload(stage=MLP_DOWN, m=tokens, k=d_ff, n=d_model,
+                     weight_bits=weight_bits, count=1, mapping=N_PARTITION,
+                     layers=layers),
+    ]
+
+
+def ssd_chunk_workloads(
+    *, heads: int, chunk: int, state: int, head_dim: int, layers: int = 1,
+) -> List[GEMMWorkload]:
+    """ONE chunk of the Mamba-2 SSD scan as act-to-act GEMM stages.
+
+    Shapes follow ``kernels/ssd``'s chunked decomposition (chunk length
+    ``q``, state width ``n``, head dim ``p``): the score GEMM
+    ``C_c B_c^T`` is computed once per chunk (B/C are group-shared in
+    Mamba-2, ``n_groups=1`` — the same reuse ``ssd_grouped_scan``
+    exploits), while the intra-chunk output, chunk-state, and inter-chunk
+    output GEMMs run per head.  All stages are int8 act-to-act (the scan
+    is activation math; decays fold into inter-stage transforms).  The
+    inter stage's stationary operand is the recurrent state — produced by
+    *earlier chunks'* state stages, the cross-chunk dependency
+    ``repro.legion.lowering.lower_ssd`` wires as a stationary ``Ref``.
+    """
+    common = dict(weight_bits=8, count=heads, mapping=N_PARTITION,
+                  layers=layers)
+    return [
+        GEMMWorkload(stage=SSD_SCORE, m=chunk, k=state, n=chunk,
+                     weight_bits=8, count=1, mapping=N_PARTITION,
+                     layers=layers),
+        GEMMWorkload(stage=SSD_INTRA, m=chunk, k=chunk, n=head_dim,
+                     **common),
+        GEMMWorkload(stage=SSD_STATE, m=state, k=chunk, n=head_dim,
+                     **common),
+        GEMMWorkload(stage=SSD_INTER, m=chunk, k=state, n=head_dim,
+                     **common),
     ]
 
 

@@ -12,6 +12,12 @@ D-Legion (analytic simulator, orchestrator plans, Pallas kernels):
             weight / stationary act for K-V), attention + serve-step
             lowering builders, the overlapped-round pipeline model, and a
             pure-NumPy reference execution
+- lowering: the workload zoo's unified `lower(spec)` front door — the
+            `LoweringSpec` dataclass family covering attention, the
+            serve-step graphs, MoE expert-skip (`lower_moe`), the
+            Mamba-2 SSD scan (`lower_ssd`), and the Zamba2-style hybrid
+            (`lower_hybrid`), plus `zoo_spec` mapping any registry
+            ModelConfig to its family's spec
 - runtime:  plan coverage validation, operand synthesis
 - modes:    adaptive-precision mode selection (W1.58 / W4 / W8, +ZTB)
 - trace:    NoC-dedup traffic measurement + simulate() cross-validation
@@ -27,6 +33,23 @@ from repro.legion.latency import (
     merge_round_criticals,
     total_cycle_error,
     validate_mem_bw,
+)
+from repro.legion.lowering import (
+    AttentionLoweringSpec,
+    HybridSpec,
+    LoweringSpec,
+    MoESpec,
+    SSDSpec,
+    ServeBatchSpec,
+    ServeMixedSpec,
+    ServeStepSpec,
+    lower,
+    lower_hybrid,
+    lower_moe,
+    lower_ssd,
+    moe_stage_names,
+    ssd_stage_names,
+    zoo_spec,
 )
 from repro.legion.machine import (
     ExecContext,
@@ -80,16 +103,20 @@ from repro.legion.trace import (
 )
 
 __all__ = [
+    "AttentionLoweringSpec",
     "BandwidthSweep",
     "CycleBreakdown",
     "CycleCounter",
     "CycleValidation",
     "ExecContext",
     "ExecutorBackend",
+    "HybridSpec",
     "InProcessExecutor",
     "Instrument",
     "LevelTiming",
+    "LoweringSpec",
     "Machine",
+    "MoESpec",
     "ModeSpec",
     "PipelineReport",
     "PipelinedExecutor",
@@ -100,6 +127,10 @@ __all__ = [
     "ProgramStage",
     "Ref",
     "RunReport",
+    "SSDSpec",
+    "ServeBatchSpec",
+    "ServeMixedSpec",
+    "ServeStepSpec",
     "ShardedExecutor",
     "StageValidation",
     "SweepPoint",
@@ -110,17 +141,23 @@ __all__ = [
     "cross_validate_cycles",
     "find_stall_knee",
     "hbm_bytes_per_cycle",
+    "lower",
     "lower_attention",
+    "lower_hybrid",
+    "lower_moe",
     "lower_serve_batch",
     "lower_serve_mixed",
     "lower_serve_step",
+    "lower_ssd",
     "merge_round_criticals",
+    "moe_stage_names",
     "prepare_context",
     "reference_outputs",
     "requantize_int8",
     "run_assignment_loop",
     "select_mode",
     "softmax_int8",
+    "ssd_stage_names",
     "sweep_bandwidth",
     "swiglu_int8",
     "synthesize_operands",
@@ -128,4 +165,5 @@ __all__ = [
     "validate_coverage",
     "validate_mem_bw",
     "validate_options",
+    "zoo_spec",
 ]

@@ -242,3 +242,21 @@ def forward_decode(cfg, params, token, cache: HybridCache, pos):
     x = rms_norm(x, params["ln_f"])
     logits = x @ params["embed"]["tokens"].T
     return logits, new_cache
+
+
+def hybrid_lowering_spec(cfg, *, seq_len: int = 64, chunks: int = 2,
+                         seed: int = 0):
+    """The config's hybrid period as a
+    :class:`repro.legion.lowering.HybridSpec`: the shared attention block
+    (applied ``n_attn_apps(cfg)`` times across the stack, weight-tied)
+    sequenced before the ``cfg.layers`` Mamba blocks' SSD scans."""
+    from repro.legion.lowering import AttentionLoweringSpec, HybridSpec
+    from repro.models.mamba2 import ssd_lowering_spec
+
+    attn = AttentionLoweringSpec(
+        heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.head_dim_,
+        hidden=cfg.d_model, seq_len=seq_len, weight_bits=cfg.weight_bits,
+        layers=n_attn_apps(cfg), seed=seed, name=cfg.name,
+    )
+    return HybridSpec(attention=attn,
+                      ssd=ssd_lowering_spec(cfg, chunks=chunks, seed=seed))

@@ -302,3 +302,18 @@ def forward_decode(cfg, params, token, cache: SSMCache, pos):
     x = rms_norm(x, params["ln_f"])
     logits = x @ params["embed"]["tokens"].T
     return logits, SSMCache(convs, states)
+
+
+def ssd_lowering_spec(cfg, *, chunks: int = 2, seed: int = 0):
+    """The config's SSD scan segment as a
+    :class:`repro.legion.lowering.SSDSpec` — the D-Legion workload-zoo
+    view of this model's chunked state/output GEMMs (the ``kernels/ssd``
+    geometry: ``ssm_heads`` heads, ``ssd_chunk``-step chunks, state width
+    ``ssm_state``, head dim ``ssm_head_dim``)."""
+    from repro.legion.lowering import SSDSpec
+
+    return SSDSpec(
+        heads=cfg.ssm_heads, chunk=cfg.ssd_chunk, state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, chunks=chunks, layers=cfg.layers,
+        seed=seed, name=cfg.name,
+    )

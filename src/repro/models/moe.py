@@ -118,3 +118,17 @@ def load_balance_loss(p, cfg, x: jnp.ndarray) -> jnp.ndarray:
     return cfg.n_experts * jnp.mean(
         probs.mean(axis=0) * dispatch.mean(axis=0)
     )
+
+
+def moe_lowering_spec(cfg, *, tokens: int = 16, seed: int = 0):
+    """The config's MoE FFN block as a :class:`repro.legion.lowering.MoESpec`
+    — the D-Legion workload-zoo view of this model: the router's top-k
+    becomes program-level ZTB sparsity (an expert with no routed tokens is
+    a fully-sparse window, exactly the analogy documented above)."""
+    from repro.legion.lowering import MoESpec
+
+    return MoESpec(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.top_k, tokens=tokens, weight_bits=cfg.weight_bits,
+        layers=cfg.layers, seed=seed, name=cfg.name,
+    )

@@ -43,6 +43,8 @@ from repro.core.workloads import (
     ATTN_SCORE,
     GEMMWorkload,
     HEAD_PER_UNIT,
+    MLP_DOWN,
+    MLP_UP,
     N_PARTITION,
     OUT_PROJ,
     QKV_PROJ,
@@ -66,10 +68,10 @@ from repro.legion.program import (
 )
 from repro.legion.trace import StageValidation, TrafficTotals
 
-# Serve-side stage names beyond the paper's four attention stages: the
-# SwiGLU MLP projections are GEMMs too, and at decode they dominate bytes.
-MLP_UP = "mlp_up"        # w1 & w3: [d_model, d_ff], two instances, shared x
-MLP_DOWN = "mlp_down"    # w2:      [d_ff, d_model]
+# Serve-side stage names beyond the paper's four attention stages (the
+# SwiGLU MLP projections are GEMMs too, and at decode they dominate bytes)
+# now live in core.workloads — MLP_UP / MLP_DOWN are imported above and
+# stay re-exported here for existing call sites.
 
 PREFILL = "prefill"
 DECODE = "decode"

@@ -462,6 +462,15 @@ def test_legion_exports_sorted_and_complete():
     for name in ("Machine", "RunReport", "Instrument", "ExecutorBackend",
                  "InProcessExecutor", "ShardedExecutor"):
         assert name in legion.__all__ and hasattr(legion, name)
+    # PR 10: the workload-zoo lowering surface — the unified dispatcher,
+    # the spec family, and the zoo lowerings — is pinned public API
+    for name in ("AttentionLoweringSpec", "HybridSpec", "LoweringSpec",
+                 "MoESpec", "SSDSpec", "ServeBatchSpec", "ServeMixedSpec",
+                 "ServeStepSpec", "lower", "lower_attention",
+                 "lower_hybrid", "lower_moe", "lower_serve_batch",
+                 "lower_serve_mixed", "lower_serve_step", "lower_ssd",
+                 "zoo_spec"):
+        assert name in legion.__all__ and hasattr(legion, name)
     # the PR-3 deprecation shims were removed in PR 6 and must stay gone
     for name in ("execute_plan", "execute_workload", "ExecutionResult"):
         assert name not in legion.__all__ and not hasattr(legion, name)
